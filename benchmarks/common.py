@@ -1,0 +1,61 @@
+"""Shared benchmark fixtures: hidden hardware profile ("the H100 node"),
+fitted estimators (creation phase), CSV output helpers."""
+from __future__ import annotations
+
+import functools
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from repro.core import (DigitalTwin, collect_benchmark, collect_memmax,  # noqa
+                        fit_estimators, make_adapter_pool, WorkloadSpec,
+                        generate_requests)
+from repro.serving import (EngineConfig, HardwareProfile, ServingEngine,  # noqa
+                           SyntheticExecutor)
+
+
+@functools.lru_cache()
+def profile() -> HardwareProfile:
+    return HardwareProfile()
+
+
+@functools.lru_cache()
+def fitted_estimators(slots: int = 32, n_adapters: int = 96):
+    p = profile()
+    ranks = {i: (8, 16, 32)[i % 3] for i in range(n_adapters)}
+    ex = SyntheticExecutor(p, ranks, slots=slots, n_adapters=n_adapters,
+                           seed=0)
+    rows = collect_benchmark(ex, slots, n_adapters, ranks)
+    mem = collect_memmax(p)
+    return fit_estimators(rows, mem, slots, n_adapters)
+
+
+def run_real(pool, dataset, horizon, slots, seed=0):
+    p = profile()
+    ranks = {a.uid: a.rank for a in pool}
+    mean_rank = float(np.mean([a.rank for a in pool])) if pool else 8.0
+    spec = WorkloadSpec(adapters=pool, dataset=dataset, horizon=horizon,
+                        seed=seed)
+    reqs = generate_requests(spec)
+    cfg = EngineConfig(
+        kv_capacity_tokens=p.kv_capacity(slots, mean_rank),
+        adapter_slots=slots)
+    eng = ServingEngine(cfg, SyntheticExecutor(
+        p, ranks, slots=slots, n_adapters=len(pool), seed=seed + 1))
+    return eng.run(reqs, horizon=horizon)
+
+
+class CsvOut:
+    def __init__(self, name: str):
+        self.name = name
+        self.t0 = time.perf_counter()
+
+    def row(self, label: str, us_per_call: float, derived: str = ""):
+        print(f"{self.name}/{label},{us_per_call:.3f},{derived}")
+
+    def done(self):
+        dt = (time.perf_counter() - self.t0) * 1e6
+        print(f"{self.name}/TOTAL,{dt:.0f},wall_us")

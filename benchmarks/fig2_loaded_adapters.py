@@ -1,0 +1,24 @@
+"""Paper Fig. 2: max throughput & batch size vs number of LOADED adapters
+(memory overhead).  Uses the Mem_max estimator + saturation workloads."""
+from __future__ import annotations
+
+from .common import CsvOut, fitted_estimators, profile
+from repro.core import DigitalTwin, WorkloadSpec, make_adapter_pool
+
+
+def main(out: CsvOut) -> None:
+    est = fitted_estimators()
+    dt = DigitalTwin(est, mode="mean")
+    for rank in (8, 32):
+        for n_loaded in (8, 64, 192, 384):
+            # slots == adapters (everything resident, as in the figure)
+            pool = make_adapter_pool(n_loaded, [rank], [3.2])  # saturating
+            spec = WorkloadSpec(adapters=pool, dataset="medium",
+                                horizon=120.0, seed=1)
+            res = dt.simulate(spec, slots=n_loaded)
+            m = res.metrics
+            cap = est.kv_capacity(n_loaded, rank)
+            out.row(f"rank{rank}_loaded{n_loaded}",
+                    res.sim_wall_time * 1e6,
+                    f"thpt={m.throughput:.0f};kv_tokens={cap};"
+                    f"starved={int(m.starved)}")

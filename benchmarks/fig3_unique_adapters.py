@@ -1,0 +1,20 @@
+"""Paper Fig. 3: throughput & ITL vs number of UNIQUE adapters in the
+running batch (compute overhead Lat_adapters)."""
+from __future__ import annotations
+
+from .common import CsvOut, fitted_estimators, profile
+from repro.core.estimators import _mk_plan
+
+
+def main(out: CsvOut) -> None:
+    est = fitted_estimators()
+    p = profile()
+    r_run = 64
+    base = est.lat_model(r_run) * est.lat_adapters(0)
+    for a in (0, 1, 2, 4, 8, 16, 32, 64):
+        lat = est.lat_model(r_run) * est.lat_adapters(min(a, r_run))
+        thpt = r_run / lat
+        itl = lat
+        out.row(f"unique{a}", lat * 1e6,
+                f"thpt={thpt:.0f};itl_ms={itl * 1e3:.2f};"
+                f"slowdown={lat / base:.3f}")

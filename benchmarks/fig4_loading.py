@@ -1,0 +1,19 @@
+"""Paper Fig. 4: adapter loading time relative to request latency, by
+adapter size and storage tier (CPU vs disk)."""
+from __future__ import annotations
+
+from .common import CsvOut, fitted_estimators
+from repro.core.workload import DATASETS
+
+
+def main(out: CsvOut) -> None:
+    est = fitted_estimators()
+    for dataset, (_, out_len) in DATASETS.items():
+        tpot = est.lat_model(1) * est.lat_adapters(1)
+        req_latency = tpot * max(out_len - 1, 1)
+        for rank in (8, 16, 32):
+            for loc in ("cpu", "disk"):
+                t_load = est.lat_load(rank, loc)
+                rel = 100.0 * t_load / req_latency
+                out.row(f"{dataset}_rank{rank}_{loc}", t_load * 1e6,
+                        f"rel_latency_pct={rel:.2f}")

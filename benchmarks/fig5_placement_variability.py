@@ -1,0 +1,33 @@
+"""Paper Fig. 5: optimal placement (throughput-vs-#adapters curves) under
+varying adapter sizes, rates and request output lengths."""
+from __future__ import annotations
+
+from .common import CsvOut, fitted_estimators
+from repro.core import find_optimal_placement, make_adapter_pool
+
+
+def main(out: CsvOut) -> None:
+    est = fitted_estimators()
+    # vary rank
+    for rank in (8, 16, 32):
+        res = find_optimal_placement(
+            est, make_adapter_pool(192, [rank], [0.05]), "medium",
+            horizon=120.0)
+        out.row(f"rank{rank}", 1.0,
+                f"opt_adapters={res.n_adapters};opt_slots={res.slots};"
+                f"thpt={res.throughput:.0f}")
+    # vary rate
+    for rate in (0.0125, 0.05, 0.4, 1.6):
+        res = find_optimal_placement(
+            est, make_adapter_pool(256, [8], [rate]), "medium",
+            horizon=120.0)
+        out.row(f"rate{rate}", 1.0,
+                f"opt_adapters={res.n_adapters};opt_slots={res.slots};"
+                f"thpt={res.throughput:.0f}")
+    # vary output length (dataset)
+    for ds in ("small", "medium", "large"):
+        res = find_optimal_placement(
+            est, make_adapter_pool(192, [8], [0.05]), ds, horizon=120.0)
+        out.row(f"dataset_{ds}", 1.0,
+                f"opt_adapters={res.n_adapters};opt_slots={res.slots};"
+                f"thpt={res.throughput:.0f}")

@@ -1,0 +1,30 @@
+"""Paper Fig. 7: (left) optimal placement as adapter slots vary — many
+more adapters than slots can be served, but too-few slots starve;
+(right) S-LoRA-style fully dynamic slot allocation for comparison."""
+from __future__ import annotations
+
+from .common import CsvOut, fitted_estimators
+from repro.core import DigitalTwin, WorkloadSpec, make_adapter_pool
+
+
+def main(out: CsvOut) -> None:
+    est = fitted_estimators()
+    dt = DigitalTwin(est, mode="mean")
+    n = 96
+    pool = make_adapter_pool(n, [8], [0.0125])
+    spec = WorkloadSpec(adapters=pool, dataset="medium", horizon=150.0,
+                        seed=2)
+    for slots in (2, 6, 12, 24, 48, 96):
+        m = dt.simulate(spec, slots=slots).metrics
+        out.row(f"slots{slots}_adapters{n}", 1.0,
+                f"thpt={m.throughput:.0f};starved={int(m.starved)}")
+    # S-LoRA mode: unified adapter/KV memory, dynamic on-demand slots with
+    # idle-adapter eviction (paper §V-B) at rank 32, across rates — the
+    # throughput decline with rate is much flatter than vLLM's
+    for rate in (0.2, 0.05, 0.0125, 0.003125):
+        pool32 = make_adapter_pool(n, [32], [rate])
+        spec32 = WorkloadSpec(adapters=pool32, dataset="medium",
+                              horizon=150.0, seed=2)
+        m = dt.simulate(spec32, slots=n, dynamic_slots=True).metrics
+        out.row(f"slora_rate{rate}", 1.0,
+                f"thpt={m.throughput:.0f};starved={int(m.starved)}")

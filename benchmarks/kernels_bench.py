@@ -1,0 +1,57 @@
+"""Kernel-layer microbenchmarks: BGMV / SGMV / flash-decode XLA-fallback
+wall time on CPU + analytical VMEM footprints of the Pallas tilings
+(the TPU target is compile-time validated by the dry-run)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .common import CsvOut
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main(out: CsvOut) -> None:
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    # BGMV decode shapes (B tokens, one adapter each)
+    for (t, d, r, o, n) in [(32, 2048, 16, 2048, 32),
+                            (128, 3072, 16, 3072, 32)]:
+        x = jax.random.normal(ks[0], (t, d), jnp.bfloat16)
+        a = jax.random.normal(ks[1], (n, d, r), jnp.bfloat16)
+        b = jax.random.normal(ks[2], (n, r, o), jnp.bfloat16)
+        idx = jax.random.randint(ks[3], (t,), 0, n)
+        f = jax.jit(lambda x, a, b, i: ops.lora_apply(x, a, b, i))
+        us = _time(f, x, a, b, idx)
+        vmem_kb = (d * r + r * o + d + o) * 2 / 1024
+        out.row(f"bgmv_t{t}_d{d}", us, f"vmem_per_step_kb={vmem_kb:.0f}")
+    # SGMV prefill shapes
+    for (t, d, r, o, n) in [(4096, 2048, 16, 2048, 32)]:
+        x = jax.random.normal(ks[0], (t, d), jnp.bfloat16)
+        a = jax.random.normal(ks[1], (n, d, r), jnp.bfloat16)
+        b = jax.random.normal(ks[2], (n, r, o), jnp.bfloat16)
+        idx = jax.random.randint(ks[3], (t,), 0, n)
+        f = jax.jit(lambda x, a, b, i: ref.lora_ref_bucketed(x, a, b, i))
+        us = _time(f, x, a, b, idx)
+        vmem_kb = (128 * d + d * r + r * o + 128 * o) * 2 / 1024
+        out.row(f"sgmv_t{t}_d{d}", us, f"vmem_per_tile_kb={vmem_kb:.0f}")
+    # flash decode
+    for (b, h, kv, d, s) in [(8, 32, 8, 128, 4096)]:
+        q = jax.random.normal(ks[0], (b, h, d), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (b, s, kv, d), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (b, s, kv, d), jnp.bfloat16)
+        f = jax.jit(lambda q, k, v: ops.flash_decode(q, k, v, s))
+        us = _time(f, q, k, v)
+        vmem_kb = (512 * kv * d * 2 * 2 + h * d * 4) / 1024
+        out.row(f"flashdec_b{b}_s{s}", us,
+                f"vmem_per_block_kb={vmem_kb:.0f}")

@@ -1,0 +1,24 @@
+"""Roofline table from the dry-run's JSONL records (§Roofline in
+EXPERIMENTS.md). Reads dryrun_pod1.jsonl written by launch/dryrun.py."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import CsvOut
+
+
+def main(out: CsvOut, path: str = "dryrun_pod1.jsonl") -> None:
+    if not os.path.exists(path):
+        out.row("missing", 0.0, f"run launch/dryrun.py first ({path})")
+        return
+    for line in open(path):
+        r = json.loads(line)
+        if not r.get("ok") or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        out.row(r["cell"], rf["step_time_s"] * 1e6,
+                f"compute={rf['compute_s']:.3e};memory={rf['memory_s']:.3e};"
+                f"collective={rf['collective_s']:.3e};"
+                f"bottleneck={rf['bottleneck']};"
+                f"useful_ratio={rf['useful_ratio']:.3f}")

@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,table1_dt]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+sys.path.insert(0, "src")
+
+from .common import CsvOut  # noqa: E402
+
+BENCHES = (
+    "fig2_loaded_adapters",
+    "fig3_unique_adapters",
+    "fig4_loading",
+    "fig5_placement_variability",
+    "fig6_slots_timeline",
+    "fig7_slots_and_dynamic",
+    "fig9_scale_384",
+    "table1_dt_accuracy",
+    "table1_placement_model",
+    "kernels_bench",
+    "roofline_report",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = [s.strip() for s in args.only.split(",") if s.strip()]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in BENCHES:
+        if only and not any(name.startswith(o) for o in only):
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        out = CsvOut(name)
+        try:
+            mod.main(out)
+            out.done()
+        except Exception as e:
+            failures += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

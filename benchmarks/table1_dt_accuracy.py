@@ -1,0 +1,59 @@
+"""Paper Table I (left): Digital Twin vs real system SMAPE for
+throughput / ITL / TTFT, full and mean modes, across the paper's workload
+grid (size distributions x rate distributions), + speedup & resources."""
+from __future__ import annotations
+
+import resource
+import time
+
+import numpy as np
+
+from .common import CsvOut, fitted_estimators, profile, run_real
+from repro.core import DigitalTwin, WorkloadSpec, generate_requests, \
+    make_adapter_pool
+from repro.serving import smape
+
+SIZE_DISTS = {"r8_16_32": [8, 16, 32], "r8_16": [8, 16]}
+RATE_DISTS = {"high": [0.2, 0.1, 0.05], "low": [0.025, 0.0125, 0.00625]}
+
+
+def main(out: CsvOut) -> None:
+    est = fitted_estimators()
+    horizon = 400.0
+    n_adapters, slots = 48, 24
+    smapes = {("full", k): [] for k in ("thpt", "itl", "ttft")}
+    smapes.update({("mean", k): [] for k in ("thpt", "itl", "ttft")})
+    sim_times, real_times = [], []
+    for sname, ranks in SIZE_DISTS.items():
+        for rname, rates in RATE_DISTS.items():
+            pool = make_adapter_pool(n_adapters, ranks, rates)
+            spec = WorkloadSpec(adapters=pool, dataset="sharegpt",
+                                horizon=horizon, seed=13)
+            t0 = time.perf_counter()
+            real = run_real(pool, "sharegpt", horizon, slots, seed=13)
+            real_times.append(time.perf_counter() - t0)
+            for mode in ("full", "mean"):
+                dt = DigitalTwin(est, mode=mode)
+                res = dt.simulate(spec, slots=slots,
+                                  requests=generate_requests(spec))
+                sim_times.append(res.sim_wall_time)
+                m = res.metrics
+                smapes[(mode, "thpt")].append(smape(m.throughput,
+                                                    real.throughput))
+                smapes[(mode, "itl")].append(smape(m.itl, real.itl))
+                smapes[(mode, "ttft")].append(smape(m.ttft, real.ttft))
+                out.row(f"{sname}_{rname}_{mode}",
+                        res.sim_wall_time * 1e6,
+                        f"thpt_smape={smapes[(mode, 'thpt')][-1]:.2f};"
+                        f"itl_smape={smapes[(mode, 'itl')][-1]:.2f};"
+                        f"ttft_smape={smapes[(mode, 'ttft')][-1]:.2f}")
+    for mode in ("full", "mean"):
+        out.row(f"AGG_{mode}", float(np.mean(sim_times)) * 1e6,
+                f"thpt_smape={np.mean(smapes[(mode, 'thpt')]):.2f};"
+                f"itl_smape={np.mean(smapes[(mode, 'itl')]):.2f};"
+                f"ttft_smape={np.mean(smapes[(mode, 'ttft')]):.2f}")
+    speedup = horizon / max(np.mean(sim_times), 1e-9)
+    rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    out.row("RESOURCES", float(np.mean(sim_times)) * 1e6,
+            f"sim_speedup_vs_served_hour={speedup:.0f}x;"
+            f"max_rss_mb={rss_mb:.0f};gpu_used=0")

@@ -1,0 +1,46 @@
+"""Production phase at fleet scale: the placement model drives a
+multi-replica router — packing, slot configuration, failure re-packing
+and straggler avoidance — and the Digital Twin verifies each replica's
+plan is starvation-free.
+
+    PYTHONPATH=src python examples/multi_replica_router.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import DigitalTwin, WorkloadSpec, build_pipeline, \
+    make_adapter_pool  # noqa: E402
+from repro.serving import PlacementRouter  # noqa: E402
+
+STATS = {"in_mean": 250, "in_std": 0, "out_mean": 231, "out_std": 0}
+
+
+def main():
+    pipe = build_pipeline(n_scenarios=16, max_adapters=96, horizon=100.0)
+    router = PlacementRouter(pipe, n_replicas=4)
+    pool = make_adapter_pool(120, [8, 16, 32], [0.2, 0.1, 0.05])
+    state = router.plan(pool, STATS)
+    print("fleet plan:")
+    dt = DigitalTwin(pipe.est, mode="mean")
+    for p in state.plans:
+        spec = WorkloadSpec(adapters=p.adapters, dataset="medium",
+                            horizon=120.0)
+        m = dt.simulate(spec, slots=max(p.slots, 1)).metrics
+        print(f"  replica {p.replica}: {len(p.adapters)} adapters, "
+              f"{p.slots} slots -> DT-verified thpt={m.throughput:.0f} "
+              f"tok/s starved={m.starved}")
+
+    print("\nreplica 2 dies -> repack:")
+    state = router.report_failure(2, pool, STATS)
+    print("  sizes:", [len(p.adapters) for p in state.plans],
+          "alive:", [p.alive for p in state.plans])
+
+    print("\nstraggler detection (replica 1 slow):")
+    bad = router.observe_itl({0: 0.031, 1: 0.40, 3: 0.029})
+    print("  flagged:", bad, "-> new adapters avoid it:",
+          {router.route(uid) for uid in range(500, 520)})
+
+
+if __name__ == "__main__":
+    main()

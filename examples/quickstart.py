@@ -1,0 +1,62 @@
+"""Quickstart: build a reduced model, serve a few batched multi-adapter
+requests through the real JAX engine, then ask the Digital Twin to
+replicate the run.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+
+from repro.configs import get_reduced  # noqa: E402
+from repro.core import (DigitalTwin, collect_benchmark, collect_memmax,  # noqa
+                        fit_estimators, WorkloadSpec, generate_requests,
+                        make_adapter_pool)
+from repro.models import Model, ShardingPlan  # noqa: E402
+from repro.serving import (EngineConfig, HardwareProfile, JaxExecutor,  # noqa
+                           ServingEngine, SyntheticExecutor, smape)
+
+
+def main():
+    # --- 1. a real (reduced) model served by the real engine -----------
+    cfg = get_reduced("phi4-mini-3.8b")
+    model = Model(cfg, ShardingPlan(mode="decode"))
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    lora = model.init_lora(key, n_adapters=4, rank=8)
+    executor = JaxExecutor(model, params, lora, max_batch=8, cache_len=256)
+
+    pool = make_adapter_pool(8, ranks=[8], rates=[0.8])
+    spec = WorkloadSpec(adapters=pool, dataset="small", horizon=10.0)
+    engine = ServingEngine(
+        EngineConfig(kv_capacity_tokens=4096, adapter_slots=4), executor)
+    m = engine.run(generate_requests(spec), horizon=10.0)
+    print(f"[engine/jax] {m.n_finished} finished, "
+          f"throughput={m.throughput:.1f} tok/s, itl={m.itl * 1e3:.1f} ms, "
+          f"ttft={m.ttft * 1e3:.1f} ms, loads={m.n_loads}")
+
+    # --- 2. the Digital Twin replicating a (synthetic H100) node -------
+    profile = HardwareProfile()
+    n, slots = 24, 12
+    pool = make_adapter_pool(n, [8, 16, 32], [0.2, 0.1, 0.05])
+    ranks = {a.uid: a.rank for a in pool}
+    ex = SyntheticExecutor(profile, ranks, slots=slots, n_adapters=n)
+    est = fit_estimators(collect_benchmark(ex, slots, n, ranks),
+                         collect_memmax(profile), slots, n)
+    spec = WorkloadSpec(adapters=pool, dataset="sharegpt", horizon=120.0)
+    real = ServingEngine(
+        EngineConfig(kv_capacity_tokens=profile.kv_capacity(slots, 18.7),
+                     adapter_slots=slots),
+        SyntheticExecutor(profile, ranks, slots=slots, n_adapters=n, seed=1)
+    ).run(generate_requests(spec), horizon=120.0)
+    sim = DigitalTwin(est, mode="full").simulate(
+        spec, slots=slots, requests=generate_requests(spec)).metrics
+    print(f"[real]  throughput={real.throughput:.1f} tok/s")
+    print(f"[twin]  throughput={sim.throughput:.1f} tok/s "
+          f"(SMAPE {smape(sim.throughput, real.throughput):.2f}%)")
+
+
+if __name__ == "__main__":
+    main()

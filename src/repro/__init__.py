@@ -1,0 +1,8 @@
+"""repro: multi-tenant LLM-adapter serving framework in JAX.
+
+Implements "A Data-driven ML Approach for Maximizing Performance in
+LLM-Adapter Serving" (Agullo et al., 2025): a Digital Twin of an online
+LLM-adapter serving system plus an ML placement pipeline, on top of a
+production-grade JAX serving/training substrate with Pallas TPU kernels.
+"""
+__version__ = "1.0.0"

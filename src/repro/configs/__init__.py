@@ -1,0 +1,3 @@
+from .registry import (ARCH_IDS, ALIASES, all_configs, canonical,  # noqa
+                       get_config, get_reduced)
+from .shapes import input_specs  # noqa

@@ -1,0 +1,58 @@
+"""Architecture registry: the 10 assigned configs + reduced smoke variants.
+
+Every entry exposes:
+  * ``CONFIG``    — the exact published configuration,
+  * ``reduced()`` — a structurally identical, CPU-sized variant for smoke
+                    tests (same family/pattern, tiny widths).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict
+
+from ..models.config import ModelConfig
+
+ARCH_IDS = (
+    "phi4_mini_3p8b",
+    "internlm2_20b",
+    "gemma3_1b",
+    "qwen1p5_4b",
+    "musicgen_medium",
+    "moonshot_v1_16b_a3b",
+    "olmoe_1b_7b",
+    "mamba2_2p7b",
+    "internvl2_2b",
+    "recurrentgemma_9b",
+)
+
+ALIASES = {
+    "phi4-mini-3.8b": "phi4_mini_3p8b",
+    "internlm2-20b": "internlm2_20b",
+    "gemma3-1b": "gemma3_1b",
+    "qwen1.5-4b": "qwen1p5_4b",
+    "musicgen-medium": "musicgen_medium",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "mamba2-2.7b": "mamba2_2p7b",
+    "internvl2-2b": "internvl2_2b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+}
+
+
+def canonical(arch: str) -> str:
+    return ALIASES.get(arch, arch.replace("-", "_").replace(".", "p"))
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f".{canonical(arch)}", __package__)
+    return mod.CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f".{canonical(arch)}", __package__)
+    return mod.reduced()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

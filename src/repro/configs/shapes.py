@@ -1,0 +1,60 @@
+"""Input ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell.
+
+Nothing here allocates: these are the abstract inputs handed to
+``jax.jit(step).lower(...)``.  LoRA serving parameters for the decode cells
+follow the paper's setting (adapter slots resident on device, rank-16
+adapters on q/v).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+# paper-facing LoRA serving defaults for the dry-run decode/prefill cells
+DRYRUN_ADAPTER_SLOTS = 32
+DRYRUN_LORA_RANK = 16
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": SDS((b, s + 1), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["tokens"] = SDS((b, s - cfg.n_image_tokens + 1), jnp.int32)
+        batch["img_embeds"] = SDS((b, cfg.n_image_tokens, cfg.d_model),
+                                  cfg.jnp_dtype)
+    return batch
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {
+        "tokens": SDS((b, s), jnp.int32),
+        "adapter_idx": SDS((b,), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        out["tokens"] = SDS((b, s - cfg.n_image_tokens), jnp.int32)
+        out["img_embeds"] = SDS((b, cfg.n_image_tokens, cfg.d_model),
+                                cfg.jnp_dtype)
+    return out
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b = shape.global_batch
+    return {
+        "tokens": SDS((b, 1), jnp.int32),
+        "adapter_idx": SDS((b,), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_inputs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_inputs(cfg, shape)
+    return decode_inputs(cfg, shape)

@@ -1,0 +1,14 @@
+"""The paper's primary contribution: Digital Twin + ML placement pipeline."""
+from .digital_twin import DigitalTwin, DTResult, EstimatorExecutor  # noqa
+from .estimators import (FittedEstimators, collect_benchmark,  # noqa
+                         collect_memmax, fit_estimators)
+from .forest import (MODEL_ZOO, DecisionTree, LinearRegression,  # noqa
+                     RandomForest, Ridge)
+from .placement import (PlacementPoint, PlacementResult,  # noqa
+                        find_optimal_placement)
+from .pipeline import PlacementPipeline, build_pipeline  # noqa
+from .dataset import (FEATURE_NAMES, PAPER_RANKS, PAPER_RATES,  # noqa
+                      TARGET_NAMES, Scenario, encode_features,
+                      label_scenarios, scenario_grid)
+from .workload import (DATASETS, WorkloadSpec, generate_requests,  # noqa
+                       make_adapter_pool, resample_requests)

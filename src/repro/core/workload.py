@@ -1,0 +1,136 @@
+"""Workload generation: multi-adapter request streams (paper §IV-A Setup).
+
+Each adapter has an independent Poisson arrival process; request lengths
+come from the paper's datasets: the three synthetic single-length profiles
+(SmallRequest 23/27, MediumRequest 250/231, LargeRequest 423/358 — P25 /
+mean / P75 of cleaned ShareGPT) or a ShareGPT-like lognormal sampler.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..serving.request import Adapter, Request
+
+DATASETS: Dict[str, Tuple[int, int]] = {
+    "small": (23, 27),
+    "medium": (250, 231),
+    "large": (423, 358),
+}
+
+# lognormal parameters roughly matching cleaned-ShareGPT in/out lengths
+SHAREGPT_IN = (5.0, 1.0)     # mu, sigma  (median ~148, mean ~244)
+SHAREGPT_OUT = (5.0, 0.9)
+
+
+@dataclasses.dataclass
+class WorkloadSpec:
+    adapters: List[Adapter]
+    dataset: str = "medium"           # small | medium | large | sharegpt
+    horizon: float = 600.0
+    seed: int = 0
+
+    @property
+    def total_rate(self) -> float:
+        return sum(a.rate for a in self.adapters)
+
+    def length_stats(self) -> Dict[str, float]:
+        """Aggregate stats for the DT *mean* mode."""
+        if self.dataset in DATASETS:
+            i, o = DATASETS[self.dataset]
+            return {"in_mean": i, "in_std": 0.0, "out_mean": o, "out_std": 0.0}
+        mi, si = SHAREGPT_IN
+        mo, so = SHAREGPT_OUT
+        return {
+            "in_mean": math.exp(mi + si ** 2 / 2),
+            "in_std": math.exp(mi + si ** 2 / 2)
+            * math.sqrt(math.exp(si ** 2) - 1),
+            "out_mean": math.exp(mo + so ** 2 / 2),
+            "out_std": math.exp(mo + so ** 2 / 2)
+            * math.sqrt(math.exp(so ** 2) - 1),
+        }
+
+
+def _sample_lengths(dataset: str, n: int, rng) -> Tuple[np.ndarray, np.ndarray]:
+    if dataset in DATASETS:
+        i, o = DATASETS[dataset]
+        return np.full(n, i, int), np.full(n, o, int)
+    if dataset == "sharegpt":
+        i = np.clip(rng.lognormal(*SHAREGPT_IN, n), 4, 4096).astype(int)
+        o = np.clip(rng.lognormal(*SHAREGPT_OUT, n), 4, 2048).astype(int)
+        return i, o
+    raise ValueError(dataset)
+
+
+def generate_requests(spec: WorkloadSpec) -> List[Request]:
+    rng = np.random.default_rng(spec.seed)
+    reqs: List[Request] = []
+    uid = 0
+    for ad in spec.adapters:
+        if ad.rate <= 0:
+            continue
+        t = 0.0
+        arrivals = []
+        while True:
+            t += rng.exponential(1.0 / ad.rate)
+            if t >= spec.horizon:
+                break
+            arrivals.append(t)
+        ins, outs = _sample_lengths(spec.dataset, len(arrivals), rng)
+        for a, i, o in zip(arrivals, ins, outs):
+            reqs.append(Request(uid=uid, adapter=ad.uid, arrival=a,
+                                prompt_len=int(i), output_len=max(int(o), 1)))
+            uid += 1
+    reqs.sort(key=lambda r: r.arrival)
+    for i, r in enumerate(reqs):
+        r.uid = i
+    return reqs
+
+
+def _moment_sampler(mean: float, std: float, rng, lo: int):
+    """Positive-valued sampler matching (mean, std) via a lognormal
+    (method of moments) — request lengths are heavy-tailed, so this
+    preserves queueing behaviour far better than a clipped normal."""
+    if std <= 0:
+        return lambda: max(int(mean), lo)
+    sigma2 = math.log(1.0 + (std / mean) ** 2)
+    mu = math.log(mean) - sigma2 / 2.0
+    sig = math.sqrt(sigma2)
+    return lambda: max(int(rng.lognormal(mu, sig)), lo)
+
+
+def resample_requests(spec: WorkloadSpec, stats: Dict[str, float],
+                      seed_shift: int = 1) -> List[Request]:
+    """DT *mean* mode: regenerate a statistically equivalent stream from
+    aggregate in/out length stats and the adapter rates."""
+    rng = np.random.default_rng(spec.seed + seed_shift)
+    sample_in = _moment_sampler(stats["in_mean"], stats["in_std"], rng, 4)
+    sample_out = _moment_sampler(stats["out_mean"], stats["out_std"], rng, 1)
+    reqs: List[Request] = []
+    uid = 0
+    for ad in spec.adapters:
+        if ad.rate <= 0:
+            continue
+        t = 0.0
+        while True:
+            t += rng.exponential(1.0 / ad.rate)
+            if t >= spec.horizon:
+                break
+            reqs.append(Request(uid=uid, adapter=ad.uid, arrival=t,
+                                prompt_len=sample_in(), output_len=sample_out()))
+            uid += 1
+    reqs.sort(key=lambda r: r.arrival)
+    for i, r in enumerate(reqs):
+        r.uid = i
+    return reqs
+
+
+def make_adapter_pool(n: int, ranks: Sequence[int], rates: Sequence[float],
+                      location: str = "cpu") -> List[Adapter]:
+    """Round-robin rank/rate assignment (paper's 'equal distribution')."""
+    return [Adapter(uid=i, rank=ranks[i % len(ranks)],
+                    rate=rates[i % len(rates)], location=location)
+            for i in range(n)]

@@ -1,0 +1,3 @@
+# Pallas TPU kernels for the paper's serving hot-spots (Punica-style
+# multi-adapter LoRA matmuls + flash decode), with pure-jnp oracles.
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,60 @@
+"""BGMV — batched-gather LoRA matmul for decode (TPU adaptation of Punica).
+
+One grid step per token block: the per-token adapter id arrives via scalar
+prefetch and drives the A/B BlockSpec index maps, so each step DMAs exactly
+one adapter's (d, r) shrink and (r, o) expand matrices into VMEM and runs
+two MXU matmuls.  CUDA-Punica's warp-gather has no TPU analogue; the
+data-dependent index_map is the TPU-native equivalent (the gather happens in
+the DMA engine, overlapped with compute by the Pallas pipeline).
+
+Tokens inside a block share the gathered adapter, so the wrapper pads the
+token axis to the block size and uses block=1 tokens for the fully general
+case (decode batches are small — this is exactly Punica's BGMV regime).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bgmv_kernel(idx_ref, x_ref, a_ref, b_ref, o_ref, *, scale: float):
+    x = x_ref[...]                                    # (1, d)
+    a = a_ref[0]                                      # (d, r)
+    b = b_ref[0]                                      # (r, o)
+    h = jnp.dot(x.astype(jnp.float32), a.astype(jnp.float32),
+                preferred_element_type=jnp.float32)   # (1, r)
+    y = jnp.dot(h, b.astype(jnp.float32),
+                preferred_element_type=jnp.float32)   # (1, o)
+    o_ref[...] = (y * scale).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def bgmv(x, a, b, idx, scale: float = 1.0, interpret: bool = False):
+    """y[t] = scale * x[t] @ A[idx[t]] @ B[idx[t]].
+
+    x: (T, d); a: (N, d, r); b: (N, r, o); idx: (T,) int32 -> (T, o).
+    """
+    t, d = x.shape
+    n, _, r = a.shape
+    o = b.shape[-1]
+    grid = (t,)
+    out = pl.pallas_call(
+        functools.partial(_bgmv_kernel, scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),
+                pl.BlockSpec((1, d, r), lambda i, idx_ref: (idx_ref[i], 0, 0)),
+                pl.BlockSpec((1, r, o), lambda i, idx_ref: (idx_ref[i], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, o), lambda i, idx_ref: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((t, o), x.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), x, a, b)
+    return out

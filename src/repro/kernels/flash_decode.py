@@ -1,0 +1,105 @@
+"""Flash-decode — single-token attention over a contiguous KV cache.
+
+Grid (batch, kv blocks); the kv-block axis is the innermost (sequential)
+grid dimension, so online-softmax state (m, l, acc) lives in fp32 VMEM
+scratch and is carried across blocks; the output is written once on the
+last block.  Per-batch valid length arrives via scalar prefetch and masks
+the tail block.  KV blocks are (block_s, KV, D) slabs — contiguous in HBM,
+DMA-friendly, 128-aligned in the minor dimension.
+
+This is the serving engine's per-step attention hot spot: the Digital
+Twin's ``Lat_model`` estimator is dominated by exactly this kernel's
+memory-bound KV streaming.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _fd_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+               m_ref, l_ref, acc_ref, *, block_s: int, n_blocks: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                   # (H, D)
+    k = k_ref[0].astype(jnp.float32)                   # (Sb, KV, D)
+    v = v_ref[0].astype(jnp.float32)
+    h, d = q.shape
+    sb, kv, _ = k.shape
+    g = h // kv
+    scale = 1.0 / (d ** 0.5)
+
+    qs = q.reshape(kv, g, d)
+    s = jax.lax.dot_general(
+        qs, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32) * scale     # (KV, G, Sb)
+    pos = j * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, 1, sb), 2)
+    mask = pos < len_ref[b]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                 # (KV, G)
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(
+        p, v, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)             # (KV, G, D)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(j == n_blocks - 1)
+    def _done():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)[..., None]
+        o_ref[0] = out.reshape(h, d).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode(q, k, v, length, block_s: int = 512,
+                 interpret: bool = False):
+    """q: (B, H, D); k/v: (B, S, KV, D); length: (B,) or scalar."""
+    b, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    block_s = min(block_s, s)
+    while s % block_s:
+        block_s //= 2
+    n_blocks = s // block_s
+    lengths = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+    return pl.pallas_call(
+        functools.partial(_fd_kernel, block_s=block_s, n_blocks=n_blocks),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, n_blocks),
+            in_specs=[
+                pl.BlockSpec((1, h, d), lambda i, j, len_ref: (i, 0, 0)),
+                pl.BlockSpec((1, block_s, kv, d),
+                             lambda i, j, len_ref: (i, j, 0, 0)),
+                pl.BlockSpec((1, block_s, kv, d),
+                             lambda i, j, len_ref: (i, j, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, h, d), lambda i, j, len_ref: (i, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((kv, g), jnp.float32),
+                pltpu.VMEM((kv, g), jnp.float32),
+                pltpu.VMEM((kv, g, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k, v)

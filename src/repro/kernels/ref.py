@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are also the XLA fallback used on non-TPU backends and inside the
+multi-pod dry-run (Pallas lowers only for TPU targets; the dry-run compiles
+for the host platform).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_shrink_ref(x, a, idx):
+    """x: (T, d); a: (N, d, r); idx: (T,) -> (T, r)."""
+    return jnp.einsum("td,tdr->tr", x, a[idx],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def lora_expand_ref(h, b, idx):
+    """h: (T, r); b: (N, r, o); idx: (T,) -> (T, o)."""
+    return jnp.einsum("tr,tro->to", h, b[idx],
+                      preferred_element_type=jnp.float32).astype(h.dtype)
+
+
+def lora_ref(x, a, b, idx, scale: float = 1.0):
+    """Fused y = scale * (x @ A[idx]) @ B[idx].
+
+    x: (T, d); a: (N, d, r); b: (N, r, o); idx: (T,) -> (T, o).
+    """
+    h = lora_shrink_ref(x, a, idx)
+    return (lora_expand_ref(h, b, idx) * jnp.asarray(scale, x.dtype))
+
+
+def lora_ref_bucketed(x, a, b, idx, scale: float = 1.0,
+                      overprovision: float = 2.0):
+    """Capacity-bucketed formulation (the SGMV math in pure XLA).
+
+    The naive `a[idx]` gather materializes a (T, d, r) tensor — 2r x the
+    activation itself — which is catastrophic at prefill sizes.  Instead,
+    bucket tokens by adapter into an (N, C, d) buffer and run two dense
+    batched matmuls (exact same scheme as the Pallas SGMV kernel).
+    Tokens over capacity fall back to 0 delta (C defaults to 2x the mean
+    load + slack, so this only triggers under extreme skew — the kernel
+    path has the same contract).
+    """
+    t, d = x.shape
+    n, _, r = a.shape
+    o = b.shape[-1]
+    cap = min(t, int(overprovision * -(-t // n)) + 8)
+    onehot = jax.nn.one_hot(idx, n, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.sum(pos * onehot, axis=1)
+    keep = pos < cap
+    posc = jnp.where(keep, pos, cap)
+    buf = jnp.zeros((n, cap + 1, d), x.dtype)
+    buf = buf.at[idx, posc].set(jnp.where(keep[:, None], x, 0))
+    h = jnp.einsum("ncd,ndr->ncr", buf[:, :cap], a,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    y = jnp.einsum("ncr,nro->nco", h, b,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    out = y[idx, posc.clip(0, cap - 1)]
+    out = jnp.where(keep[:, None], out, 0)
+    return out * jnp.asarray(scale, x.dtype)
+
+
+def flash_decode_ref(q, k, v, length):
+    """Single-token attention against a contiguous cache.
+
+    q: (B, H, D); k/v: (B, S, KV, D); length: scalar or (B,) valid length.
+    """
+    b, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qs = q.reshape(b, kv, g, d)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qs.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(float(d))
+    pos = jnp.arange(s)
+    ln = jnp.asarray(length)
+    mask = pos[None, :] < (ln[:, None] if ln.ndim else ln[None, None])
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first init.  (Tests may shrink the placeholder fleet via
+# REPRO_DRYRUN_DEVICES before importing this module.)
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh) cell
+lowers, SPMD-partitions and compiles on the production mesh, and extract
+the roofline terms from the compiled artifacts.
+
+Per cell:
+  1. FULL compile (scan-over-layers, compact HLO) on the requested mesh ->
+     memory_analysis() (fits-on-chip proof) + compile proof.
+  2. Two PROBE compiles (reduced depth, all loops unrolled) -> exact
+     per-repeat FLOPs / bytes / collective-bytes, linearly extrapolated to
+     full depth (see launch/roofline.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch phi4-mini-3.8b --shape train_4k
+  python -m repro.launch.dryrun --arch all --multi-pod --out dryrun.jsonl
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from ..configs import ARCH_IDS, canonical, get_config
+from ..models.config import SHAPES, applicable_shapes
+from ..models.transformer import build_segments
+from .mesh import make_production_mesh
+from .roofline import (CellCost, RooflineTerms, cost_from_compiled,
+                       model_flops_for)
+from .steps import StepBundle, build_step, cell_id
+
+
+def _compile(bundle: StepBundle):
+    jitted = jax.jit(bundle.fn,
+                     in_shardings=bundle.in_shardings,
+                     out_shardings=bundle.out_shardings,
+                     donate_argnums=bundle.donate_argnums)
+    lowered = jitted.lower(*bundle.args)
+    compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _memory_report(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            return {}
+        out = {}
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            if hasattr(ma, attr):
+                out[attr] = float(getattr(ma, attr))
+        out["total_bytes_per_device"] = (
+            out.get("argument_size_in_bytes", 0.0)
+            + out.get("output_size_in_bytes", 0.0)
+            + out.get("temp_size_in_bytes", 0.0)
+            - out.get("alias_size_in_bytes", 0.0))
+        return out
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def probe_depths(cfg) -> Dict[str, int]:
+    plen = len(cfg.block_pattern)
+    rem = cfg.n_layers % plen
+    full_repeats = cfg.n_layers // plen
+    return {"probe1": plen + rem, "probe2": 2 * plen + rem,
+            "extra_repeats": full_repeats - 1}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             probes: bool = True, full: bool = True,
+             mesh=None, plan_overrides=None) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec: Dict[str, Any] = {"cell": cell_id(arch, shape_name, multi_pod),
+                           "arch": arch, "shape": shape_name,
+                           "multi_pod": multi_pod, "ok": False}
+    if shape not in applicable_shapes(cfg):
+        rec["skipped"] = ("long_500k needs sub-quadratic attention; "
+                          f"{cfg.name} is full-attention (see DESIGN.md)")
+        rec["ok"] = True
+        return rec
+    mesh = mesh if mesh is not None else make_production_mesh(
+        multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    try:
+        if full:
+            bundle = build_step(cfg, shape, mesh, unroll=False,
+                                plan_overrides=plan_overrides)
+            lowered, compiled = _compile(bundle)
+            rec["memory"] = _memory_report(compiled)
+            rec["full_compile_s"] = round(time.time() - t0, 1)
+            del lowered, compiled
+        if probes:
+            pd = probe_depths(cfg)
+            costs = []
+            for depth in (pd["probe1"], pd["probe2"]):
+                b = build_step(cfg, shape, mesh, unroll=True,
+                               layers_override=depth,
+                               plan_overrides=plan_overrides)
+                lw, cp = _compile(b)
+                # collectives only exist post-SPMD-partitioning
+                costs.append(cost_from_compiled(cp, cp.as_text()))
+                del lw, cp
+            cost = costs[0].extrapolate(costs[1], pd["extra_repeats"])
+            rec["cost"] = {"flops_per_chip": cost.flops,
+                           "bytes_per_chip": cost.bytes_accessed,
+                           "collectives": cost.coll}
+            mf = model_flops_for(cfg, shape)
+            terms = RooflineTerms.from_cost(cost, n_chips, mf)
+            rec["roofline"] = {
+                "compute_s": terms.compute_s,
+                "memory_s": terms.memory_s,
+                "collective_s": terms.collective_s,
+                "bottleneck": terms.bottleneck,
+                "model_flops": mf,
+                "hlo_flops_global": terms.hlo_flops_global,
+                "useful_ratio": terms.useful_ratio,
+                "step_time_s": terms.step_time_s,
+                "roofline_fraction": terms.roofline_fraction,
+            }
+        rec["ok"] = True
+        rec["elapsed_s"] = round(time.time() - t0, 1)
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--no-full", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [canonical(args.arch)]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    print(f"mesh: {dict(mesh.shape)} ({mesh.size} chips)")
+    records = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([s.name for s in applicable_shapes(cfg)]
+                  if args.shape == "all" else [args.shape])
+        for shape_name in shapes:
+            rec = run_cell(arch, shape_name, args.multi_pod,
+                           probes=not args.no_probes,
+                           full=not args.no_full, mesh=mesh)
+            records.append(rec)
+            status = "OK " if rec["ok"] else "FAIL"
+            extra = ""
+            if "memory" in rec:
+                extra += (f" mem/dev={rec['memory'].get('total_bytes_per_device', 0) / 2 ** 30:.2f}GiB")
+            if "roofline" in rec:
+                r = rec["roofline"]
+                extra += (f" terms(c/m/t)={r['compute_s']:.3e}/"
+                          f"{r['memory_s']:.3e}/{r['collective_s']:.3e}"
+                          f" bottleneck={r['bottleneck']}")
+            if "skipped" in rec:
+                extra = " SKIP: " + rec["skipped"][:60]
+            if "error" in rec:
+                extra = " ERR: " + rec["error"][:160]
+            print(f"{status} {rec['cell']}{extra}", flush=True)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+    n_ok = sum(r["ok"] for r in records)
+    print(f"{n_ok}/{len(records)} cells OK")
+    if n_ok < len(records):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+"""Roofline analysis from compiled artifacts (no real hardware).
+
+Terms per (arch x shape x mesh), all per chip:
+    compute    = HLO_FLOPs / peak_FLOPs          (197 TFLOP/s bf16, v5e)
+    memory     = HLO_bytes / HBM_bw              (819 GB/s)
+    collective = collective_bytes / link_bw      (~50 GB/s/link ICI)
+
+``cost_analysis`` counts while-loop bodies ONCE, so scanned-layer programs
+undercount.  We therefore lower two *probe* variants of each cell with all
+inner loops unrolled — depth = (pattern + remainder) and (2x pattern +
+remainder) — and extrapolate linearly: probes differ by exactly one
+pattern repeat, so  total = probe1 + (repeats_full - 1) * (probe2 - probe1)
+is exact.  Collective bytes are parsed from the probes' HLO text (operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute), which is loop-free by construction.
+
+Memory feasibility comes from the FULL compile's ``memory_analysis()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "opaque": 0,
+}
+
+_DEF_RE = re.compile(
+    r"%?([\w\.\-]+)\s*=\s*\(?([a-z0-9]+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op, by op kind."""
+    sizes: Dict[str, int] = {}
+    for m in _DEF_RE.finditer(hlo_text):
+        name, dtype, dims = m.groups()
+        if dtype in _DTYPE_BYTES or dtype.startswith(("f", "s", "u", "b")):
+            sizes[name] = _shape_bytes(dtype, dims)
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w\.\-]+\s*=\s*[^=]*?\b"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(?:-start)?\(", stripped)
+        if not m:
+            continue
+        kind = m.group(1)
+        args = stripped[stripped.index("(") + 1:]
+        ops = re.findall(r"%?([\w\.\-]+)(?:,|\))", args.split("->")[0])
+        total = 0
+        for op in ops:
+            if op in sizes:
+                total += sizes[op]
+        out[kind] += total
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclasses.dataclass
+class CellCost:
+    flops: float                 # per chip
+    bytes_accessed: float        # per chip
+    coll: Dict[str, int]         # per chip, by kind
+
+    def extrapolate(self, other: "CellCost", extra_repeats: int
+                    ) -> "CellCost":
+        """self = 1-repeat probe, other = 2-repeat probe."""
+        d_flops = other.flops - self.flops
+        d_bytes = other.bytes_accessed - self.bytes_accessed
+        coll = {k: int(self.coll.get(k, 0) + extra_repeats
+                       * (other.coll.get(k, 0) - self.coll.get(k, 0)))
+                for k in set(self.coll) | set(other.coll)}
+        return CellCost(self.flops + extra_repeats * d_flops,
+                        self.bytes_accessed + extra_repeats * d_bytes,
+                        coll)
+
+
+def cost_from_compiled(compiled, hlo_text: str) -> CellCost:
+    ca = compiled.cost_analysis()
+    return CellCost(flops=float(ca.get("flops", 0.0)),
+                    bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+                    coll=collective_bytes(hlo_text))
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float           # 6ND / 2ND analytical, global
+    hlo_flops_global: float
+    bottleneck: str = ""
+    useful_ratio: float = 0.0
+
+    @staticmethod
+    def from_cost(cost: CellCost, n_chips: int, model_flops: float
+                  ) -> "RooflineTerms":
+        c = cost.flops / PEAK_FLOPS
+        m = cost.bytes_accessed / HBM_BW
+        t = cost.coll.get("total", 0) / LINK_BW
+        terms = RooflineTerms(
+            compute_s=c, memory_s=m, collective_s=t,
+            model_flops=model_flops,
+            hlo_flops_global=cost.flops * n_chips)
+        terms.bottleneck = max(
+            (("compute", c), ("memory", m), ("collective", t)),
+            key=lambda kv: kv[1])[0]
+        terms.useful_ratio = (model_flops / terms.hlo_flops_global
+                              if terms.hlo_flops_global else 0.0)
+        return terms
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the roofline-limited step: the score
+        §Perf optimizes.  = (model_flops/chips/peak) / step_time."""
+        if self.step_time_s == 0:
+            return 0.0
+        n_chips = self.hlo_flops_global / max(self.compute_s * PEAK_FLOPS, 1)
+        ideal = self.model_flops / max(n_chips, 1) / PEAK_FLOPS
+        return ideal / self.step_time_s
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytical useful FLOPs for the cell (6ND train, 2ND inference;
+    MoE counts active experts only; + attention quadratic term)."""
+    n_active = cfg.param_count(active_only=True)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    flops = mult * n_active * tokens
+    # attention score/value FLOPs
+    hd, nq = cfg.resolved_head_dim, cfg.n_heads
+    kinds = cfg.layer_kinds
+    for k in kinds:
+        if k == "global":
+            if shape.kind == "decode":
+                flops += mult / 2 * 2 * 2 * shape.global_batch * nq * hd \
+                    * shape.seq_len
+            else:
+                flops += mult / 2 * 2 * 2 * tokens * nq * hd \
+                    * shape.seq_len / 2
+        elif k == "local":
+            w = min(cfg.local_window, shape.seq_len)
+            if shape.kind == "decode":
+                flops += mult / 2 * 2 * 2 * shape.global_batch * nq * hd * w
+            else:
+                flops += mult / 2 * 2 * 2 * tokens * nq * hd * w
+    return flops

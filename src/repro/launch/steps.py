@@ -1,0 +1,149 @@
+"""Step builders: one (arch x shape x mesh) cell -> a jit-able step function
+with abstract inputs and explicit in/out shardings.
+
+Used by the multi-pod dry-run (lower+compile), the roofline probes
+(reduced-depth unrolled variants of the same cell) and the train/serve
+launchers (with real arrays instead of ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import get_config
+from ..configs.shapes import (DRYRUN_ADAPTER_SLOTS, DRYRUN_LORA_RANK,
+                              input_specs)
+from ..models import Model, make_plan
+from ..models.config import ModelConfig, SHAPES, ShapeConfig
+from ..training import AdamWConfig, TrainConfig, adamw_init, make_train_step
+
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Any
+    args: Tuple[Any, ...]                 # ShapeDtypeStructs (abstract)
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    plan: Any
+    model: Model
+    meta: Dict[str, Any]
+
+
+def _ns(mesh: Optional[Mesh], spec):
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec)
+
+
+def _tree_shardings(mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _replicated_like(mesh, tree):
+    return jax.tree.map(lambda x: NamedSharding(mesh, P(*([None] * x.ndim))),
+                        tree)
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Optional[Mesh],
+               *, unroll: bool = False, remat: bool = True,
+               layers_override: Optional[int] = None,
+               plan_overrides: Optional[Dict[str, Any]] = None) -> StepBundle:
+    if layers_override:
+        cfg = dataclasses.replace(cfg, n_layers=layers_override)
+    plan = make_plan(cfg, mesh, shape.kind, unroll=unroll,
+                     remat=remat and shape.kind == "train",
+                     global_batch=shape.global_batch)
+    if plan_overrides:
+        plan = dataclasses.replace(plan, **plan_overrides)
+    model = Model(cfg, plan)
+    key = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(model.init, key)
+    pspecs = plan.param_specs(params_sds)
+    inputs = input_specs(cfg, shape)
+    dp = plan.dp()
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(optimizer=AdamWConfig())
+        opt_sds = jax.eval_shape(lambda p: adamw_init(p, tcfg.optimizer),
+                                 params_sds)
+        # moments inherit param shardings; scalars replicated
+        ospecs = {
+            "step": P(),
+            "m": pspecs, "v": pspecs,
+        }
+        step = make_train_step(model, tcfg)
+        batch_specs = {"tokens": P(dp, None)}
+        if "img_embeds" in inputs:
+            batch_specs["img_embeds"] = P(dp, None, None)
+        args = (params_sds, opt_sds, inputs)
+        if mesh is None:
+            in_sh = out_sh = None
+        else:
+            in_sh = (_tree_shardings(mesh, pspecs),
+                     _tree_shardings(mesh, ospecs),
+                     _tree_shardings(mesh, batch_specs))
+            info_sh = {"loss": _ns(mesh, P()), "grad_norm": _ns(mesh, P()),
+                       "lr": _ns(mesh, P())}
+            out_sh = (in_sh[0], in_sh[1], info_sh)
+        return StepBundle(step, args, in_sh, out_sh, (0, 1), plan, model,
+                          {"kind": "train"})
+
+    # serving cells share LoRA adapters (the paper's scenario)
+    lora_sds = jax.eval_shape(
+        lambda k: model.init_lora(k, DRYRUN_ADAPTER_SLOTS, DRYRUN_LORA_RANK),
+        key)
+    lora_sh = _replicated_like(mesh, lora_sds) if mesh is not None else None
+
+    if shape.kind == "prefill":
+        def step(params, lora, tokens, adapter_idx, img_embeds=None):
+            return model.prefill(params, lora, tokens, adapter_idx,
+                                 img_embeds=img_embeds)
+
+        args = [params_sds, lora_sds, inputs["tokens"],
+                inputs["adapter_idx"]]
+        in_sh = None
+        out_sh = None
+        if mesh is not None:
+            in_list = [_tree_shardings(mesh, pspecs), lora_sh,
+                       _ns(mesh, P(dp, None)), _ns(mesh, P(dp))]
+            if "img_embeds" in inputs:
+                in_list.append(_ns(mesh, P(dp, None, None)))
+            in_sh = tuple(in_list)
+        if "img_embeds" in inputs:
+            args.append(inputs["img_embeds"])
+        cache_sds = jax.eval_shape(step, *args)[1]
+        if mesh is not None:
+            cspecs = plan.cache_specs(cache_sds)
+            out_sh = (_ns(mesh, P(dp, None)),
+                      _tree_shardings(mesh, cspecs))
+        return StepBundle(step, tuple(args), in_sh, out_sh, (), plan, model,
+                          {"kind": "prefill"})
+
+    # decode: one new token against a cache of length shape.seq_len
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+
+    def step(params, lora, cache, tokens, adapter_idx):
+        return model.decode_step(params, lora, cache, tokens, adapter_idx)
+
+    args = (params_sds, lora_sds, cache_sds, inputs["tokens"],
+            inputs["adapter_idx"])
+    in_sh = out_sh = None
+    if mesh is not None:
+        cspecs = plan.cache_specs(cache_sds)
+        csh = _tree_shardings(mesh, cspecs)
+        in_sh = (_tree_shardings(mesh, pspecs), lora_sh, csh,
+                 _ns(mesh, P(dp, None)), _ns(mesh, P(dp)))
+        out_sh = (_ns(mesh, P(dp, None)), csh)
+    return StepBundle(step, args, in_sh, out_sh, (2,), plan, model,
+                      {"kind": "decode"})
+
+
+def cell_id(arch: str, shape_name: str, multi_pod: bool) -> str:
+    return f"{arch}:{shape_name}:{'pod2' if multi_pod else 'pod1'}"

@@ -1,0 +1,81 @@
+"""Training launcher.
+
+CPU demo:          python -m repro.launch.train --arch phi4-mini-3.8b \
+                       --reduced --steps 50 --batch 8 --seq 128
+Production lower:  the dry-run (launch/dryrun.py) lowers this exact step
+                   on the 16x16 / 2x16x16 meshes.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import canonical, get_config, get_reduced
+from ..data import DataConfig, TokenPipeline
+from ..models import Model, ShardingPlan
+from ..training import (AdamWConfig, TrainConfig, init_train_state,
+                        make_train_step)
+from .fault_tolerance import FTConfig, FaultTolerantLoop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi4-mini-3.8b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized config (smoke/demo)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    model = Model(cfg, ShardingPlan(mode="train"))
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=args.lr, warmup_steps=10))
+    step_fn = jax.jit(make_train_step(model, tcfg))
+    pipe = TokenPipeline(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, n_image_tokens=cfg.n_image_tokens,
+        d_model=cfg.d_model))
+
+    params, opt = init_train_state(model, jax.random.PRNGKey(0), tcfg)
+    state = {"params": params, "opt": opt}
+    ft = FaultTolerantLoop(
+        FTConfig(args.checkpoint_dir,
+                 checkpoint_every=args.checkpoint_every), state)
+    state = ft.resume_or_init(lambda: state)
+    start = ft.mgr.latest_step() or 0
+    if start:
+        print(f"resumed from step {start}")
+
+    def one(state, batch):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if "img_embeds" in batch:
+            batch["img_embeds"] = batch["img_embeds"].astype(cfg.jnp_dtype)
+        p, o, info = step_fn(state["params"], state["opt"], batch)
+        one.last_info = info
+        return {"params": p, "opt": o}
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        state = one(state, pipe.batch_at(step))
+        if step % 10 == 0 or step == args.steps - 1:
+            info = one.last_info
+            print(f"step {step:5d} loss={float(info['loss']):.4f} "
+                  f"gnorm={float(info['grad_norm']):.3f} "
+                  f"({(time.time() - t0):.1f}s)", flush=True)
+        if (step + 1) % args.checkpoint_every == 0:
+            ft.mgr.save(step + 1, state)
+    ft.mgr.save(args.steps, state)
+    ft.mgr.wait()
+    print(f"done: {args.steps} steps in {time.time() - t0:.1f}s; "
+          f"checkpoints at {args.checkpoint_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .config import ModelConfig, ShapeConfig, SHAPES, applicable_shapes  # noqa
+from .sharding import ShardingPlan, make_plan  # noqa
+from .transformer import Model, build_segments  # noqa

@@ -1,0 +1,154 @@
+"""Primitive layers shared by every architecture family.
+
+All parameters are plain dict pytrees; all functions are pure.  Matmuls
+accumulate in fp32 (``preferred_element_type``) — the MXU-native convention.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------- #
+# init helpers
+# --------------------------------------------------------------------------- #
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan_in = fan_in if fan_in is not None else shape[-2]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------------- #
+
+def init_norm(kind: str, width: int, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((width,), dtype)}
+    return {"scale": jnp.ones((width,), dtype), "bias": jnp.zeros((width,), dtype)}
+
+
+def apply_norm(kind: str, p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    else:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# positional embeddings
+# --------------------------------------------------------------------------- #
+
+def rope_freqs(head_dim: int, theta: float):
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim//2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    angles = angles[..., None, :]                              # (..., S, 1, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos_emb(positions, width: int):
+    """positions: (..., S) -> (..., S, width)."""
+    half = width // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+# --------------------------------------------------------------------------- #
+# MLP (dense FFN)
+# --------------------------------------------------------------------------- #
+
+def init_mlp(key, kind: str, d_model: int, d_ff: int, dtype, stack: tuple = ()):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], (*stack, d_model, d_ff), dtype),
+            "w_up": dense_init(ks[1], (*stack, d_model, d_ff), dtype),
+            "w_down": dense_init(ks[2], (*stack, d_ff, d_model), dtype, fan_in=d_ff),
+        }
+    return {
+        "w_up": dense_init(ks[0], (*stack, d_model, d_ff), dtype),
+        "w_down": dense_init(ks[1], (*stack, d_ff, d_model), dtype, fan_in=d_ff),
+    }
+
+
+def apply_mlp(kind: str, p, x):
+    if kind == "swiglu":
+        gate = jnp.einsum("...d,df->...f", x, p["w_gate"],
+                          preferred_element_type=jnp.float32)
+        up = jnp.einsum("...d,df->...f", x, p["w_up"],
+                        preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(gate) * up).astype(x.dtype)
+    else:
+        up = jnp.einsum("...d,df->...f", x, p["w_up"],
+                        preferred_element_type=jnp.float32)
+        h = jax.nn.gelu(up).astype(x.dtype)
+    out = jnp.einsum("...f,fd->...d", h, p["w_down"],
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# embedding / unembedding
+# --------------------------------------------------------------------------- #
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+def init_embed(key, vocab: int, d_model: int, dtype, tie: bool):
+    ks = jax.random.split(key, 2)
+    p = {"embed": embed_init(ks[0], (pad_vocab(vocab), d_model), dtype)}
+    if not tie:
+        p["unembed"] = dense_init(ks[1], (d_model, pad_vocab(vocab)), dtype)
+    return p
+
+
+def embed_tokens(p, tokens):
+    return jnp.take(p["embed"], tokens, axis=0)
+
+
+def unembed(p, x, softcap: float = 0.0):
+    if "unembed" in p:
+        logits = jnp.einsum("...d,dv->...v", x, p["unembed"],
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.einsum("...d,vd->...v", x, p["embed"],
+                            preferred_element_type=jnp.float32)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits (..., V) fp32; labels int (...,). Returns mean loss."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(nll.dtype)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

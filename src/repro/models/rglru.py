@@ -1,0 +1,102 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The recurrence h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t) is a
+per-channel gated linear recurrence: channels are independent, so the block
+shards width→``model`` with no collectives in the mixer.  Following Griffin,
+the recurrence/input gates use *block-diagonal* weights (``n_gate_blocks``
+blocks) — which also makes them embarrassingly shardable.  Training/prefill
+uses ``jax.lax.associative_scan`` (log-depth, fully counted by HLO cost
+analysis); decode is the O(1) update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .ssm import causal_conv
+
+C_RGLRU = 8.0
+N_GATE_BLOCKS = 16
+
+
+def lru_width(cfg) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def init_rglru(key, cfg, dtype, stack: tuple = ()):
+    d = cfg.d_model
+    w = lru_width(cfg)
+    nb = N_GATE_BLOCKS
+    wb = w // nb
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": layers.dense_init(ks[0], (*stack, d, w), dtype),
+        "w_gate": layers.dense_init(ks[1], (*stack, d, w), dtype),
+        "conv_w": (jax.random.normal(ks[2], (*stack, cfg.conv_width, w),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "w_a": layers.dense_init(ks[3], (*stack, nb, wb, wb), dtype, fan_in=wb),
+        "w_i": layers.dense_init(ks[4], (*stack, nb, wb, wb), dtype, fan_in=wb),
+        "a_param": jnp.full((*stack, w), 1.0, jnp.float32),
+        "w_out": layers.dense_init(ks[5], (*stack, w, d), dtype, fan_in=w),
+    }
+
+
+def _block_gate(u, w):
+    """Block-diagonal linear: u (B,S,W), w (nb, wb, wb) -> (B,S,W) fp32.
+
+    Computed in fp32: gate precision matters for the recurrence, and the
+    CPU backend lacks a batched bf16xbf16->f32 dot (TPU MXU has it natively).
+    """
+    b, s, width = u.shape
+    nb, wb, _ = w.shape
+    ub = u.reshape(b, s, nb, wb).astype(jnp.float32)
+    out = jnp.einsum("bsnw,nwk->bsnk", ub, w.astype(jnp.float32))
+    return out.reshape(b, s, width)
+
+
+def rglru_scan(a, bx, h0=None):
+    """h_t = a_t * h_{t-1} + bx_t via associative scan. a/bx: (B,S,W) fp32."""
+    def combine(u, v):
+        a1, b1 = u
+        a2, b2 = v
+        return a2 * a1, a2 * b1 + b2
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+    _, bv = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return bv                                              # (B,S,W) = h_t
+
+
+def apply_rglru(p, x, *, conv_state=None, lru_state=None):
+    """x: (B,S,d) -> (y (B,S,d), (conv_state, lru_state))."""
+    gate_b = jnp.einsum("bsd,dw->bsw", x, p["w_gate"],
+                        preferred_element_type=jnp.float32)
+    gate_b = jax.nn.gelu(gate_b).astype(x.dtype)
+
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    decode = lru_state is not None and x.shape[1] == 1
+    u, new_conv = causal_conv(u, p["conv_w"],
+                              state=conv_state if decode else None,
+                              activate=False)
+
+    r = jax.nn.sigmoid(_block_gate(u, p["w_a"]))
+    i = jax.nn.sigmoid(_block_gate(u, p["w_i"]))
+    log_a = -C_RGLRU * jax.nn.softplus(p["a_param"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    gated_x = u.astype(jnp.float32) * i
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * gated_x
+
+    if decode:
+        h = a[:, 0] * lru_state.astype(jnp.float32) + b[:, 0]
+        new_state = h
+        h = h[:, None]
+    else:
+        h = rglru_scan(a, b, None if lru_state is None
+                       else lru_state.astype(jnp.float32))
+        new_state = h[:, -1]
+
+    y = h.astype(x.dtype) * gate_b
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, (new_conv, new_state.astype(jnp.float32))

@@ -1,0 +1,182 @@
+"""Mamba2 / SSD (state-space duality) mixer.
+
+Chunked SSD algorithm (arXiv:2405.21060): within a chunk the output is a
+masked quadratic form (MXU-friendly); across chunks a linear recurrence on
+the (heads, head_dim, state) tensor carries history.  Heads are independent,
+so the block shards cleanly head→``model`` with zero collectives inside the
+mixer; only the in/out projections touch the sharded width.  Projections are
+kept as separate parameters (w_z / w_x / w_bc / w_dt) so each shards on
+exactly one dimension — no slicing across shard boundaries.
+
+Decode is the O(1) recurrent update on the carried state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+
+def ssd_dims(cfg):
+    d_inner = cfg.d_inner
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_ssd(key, cfg, dtype, stack: tuple = ()):
+    d = cfg.d_model
+    d_inner, n_heads, hd, state = ssd_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_z": layers.dense_init(ks[0], (*stack, d, d_inner), dtype),
+        "w_x": layers.dense_init(ks[1], (*stack, d, d_inner), dtype),
+        "w_bc": layers.dense_init(ks[2], (*stack, d, 2 * state), dtype),
+        "w_dt": layers.dense_init(ks[3], (*stack, d, n_heads), dtype),
+        "w_out": layers.dense_init(ks[4], (*stack, d_inner, d), dtype,
+                                   fan_in=d_inner),
+        "conv_x": (jax.random.normal(ks[5], (*stack, cfg.conv_width, d_inner),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_bc": (jax.random.normal(ks[6], (*stack, cfg.conv_width, 2 * state),
+                                      jnp.float32) * 0.1).astype(dtype),
+        "a_log": jnp.zeros((*stack, n_heads), jnp.float32),
+        "dt_bias": jnp.full((*stack, n_heads), -2.0, jnp.float32),
+        "d_skip": jnp.ones((*stack, n_heads), jnp.float32),
+    }
+
+
+def causal_conv(x, w, state=None, activate: bool = True):
+    """Depthwise causal conv. x: (B,S,C); w: (W,C); state: (B,W-1,C)|None.
+
+    Returns (out, new_state) where new_state holds the last W-1 inputs.
+    """
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :].astype(x.dtype)
+              for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else None
+    if activate:
+        out = jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype)
+    return out, new_state
+
+
+def ssd_chunked(x, b, c, dt, a_log, *, chunk: int, unroll: bool = False,
+                init_state=None):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P) values; b,c: (B,S,N); dt: (B,S,H) (post-softplus);
+    a_log: (H,).  Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    nc = s // chunk
+    q = chunk
+
+    a = -jnp.exp(a_log)                                   # (H,) negative
+    dta = dt * a[None, None, :]                           # (B,S,H)
+    xr = x.reshape(bs, nc, q, h, p)
+    br = b.reshape(bs, nc, q, n).astype(jnp.float32)
+    cr = c.reshape(bs, nc, q, n).astype(jnp.float32)
+    dtr = dt.reshape(bs, nc, q, h)
+    dtar = dta.reshape(bs, nc, q, h)
+
+    cum = jnp.cumsum(dtar, axis=2)                        # (B,nc,q,H)
+    seg_sum = cum[:, :, -1]                               # (B,nc,H)
+    decay_to_end = jnp.exp(seg_sum[:, :, None] - cum)     # (B,nc,q,H)
+    # contribution of the incoming state to token i decays by a_1..a_i
+    decay_from_start = jnp.exp(cum)                       # (B,nc,q,H)
+
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j, weighted by dt_j
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nc,q,q,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(li), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", cr, br)            # (B,nc,q,q)
+    gates = cb[..., None] * lmat * dtr[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", gates, xr.astype(jnp.float32))
+
+    # per-chunk contributed state: (B,nc,H,P,N)
+    xdt = xr.astype(jnp.float32) * (dtr * decay_to_end)[..., None]
+    chunk_states = jnp.einsum("bcqhp,bcqn->bchpn", xdt, br)
+
+    # inter-chunk recurrence
+    decay_chunk = jnp.exp(seg_sum)                        # (B,nc,H)
+    s0 = (jnp.zeros((bs, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, xs):
+        dchunk, cstate = xs
+        new = carry * dchunk[:, :, None, None] + cstate
+        return new, carry                                 # emit state BEFORE chunk
+
+    xs = (decay_chunk.swapaxes(0, 1), chunk_states.swapaxes(0, 1))
+    if unroll:
+        carry, prev = s0, []
+        for i in range(nc):
+            carry, out = step(carry, (xs[0][i], xs[1][i]))
+            prev.append(out)
+        prev = jnp.stack(prev)
+    else:
+        carry, prev = jax.lax.scan(step, s0, xs)
+    prev = prev.swapaxes(0, 1)                            # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", cr, prev)
+    y_inter = y_inter * decay_from_start[..., None]
+    y = (y_intra + y_inter).reshape(bs, s, h, p)
+    return y, carry
+
+
+def apply_ssd(p, x, cfg, *, chunk: int = 0, unroll: bool = False,
+              conv_state=None, ssm_state=None):
+    """Full Mamba2 mixer body (norm handled by the caller).
+
+    Train/prefill: x (B,S,d) -> (y (B,S,d), (conv_x, conv_bc, ssm_state)).
+    Decode: S == 1 and states provided -> O(1) update.
+    conv_state (when decoding) is a tuple (conv_x_state, conv_bc_state).
+    """
+    d_inner, n_heads, hd, state = ssd_dims(cfg)
+    bs, s, _ = x.shape
+    z = jnp.einsum("bsd,dk->bsk", x, p["w_z"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    xi = jnp.einsum("bsd,dk->bsk", x, p["w_x"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    bc = jnp.einsum("bsd,dk->bsk", x, p["w_bc"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    dt = jnp.einsum("bsd,dk->bsk", x, p["w_dt"],
+                    preferred_element_type=jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+
+    decode = ssm_state is not None and s == 1
+    cx_state, cbc_state = conv_state if decode else (None, None)
+    xi, new_cx = causal_conv(xi, p["conv_x"], state=cx_state)
+    bc, new_cbc = causal_conv(bc, p["conv_bc"], state=cbc_state)
+    xi = xi.reshape(bs, s, n_heads, hd)
+    b = bc[..., :state]
+    c = bc[..., state:]
+
+    if decode:
+        a = -jnp.exp(p["a_log"])
+        da = jnp.exp(dt[:, 0] * a[None, :])               # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn",
+                         (xi[:, 0] * dt[:, 0, :, None]).astype(jnp.float32),
+                         b[:, 0].astype(jnp.float32))
+        new_state = ssm_state.astype(jnp.float32) * da[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", c[:, 0].astype(jnp.float32), new_state)
+        y = y[:, None]                                    # (B,1,H,P)
+    else:
+        y, new_state = ssd_chunked(xi, b, c, dt, p["a_log"],
+                                   chunk=chunk or cfg.ssm_chunk,
+                                   unroll=unroll, init_state=ssm_state)
+
+    y = y + xi.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bs, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)  # gate
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, (new_cx, new_cbc, new_state.astype(jnp.float32))

@@ -1,0 +1,9 @@
+from .adapter_cache import AdapterSlotCache  # noqa
+from .engine import EngineConfig, ServingEngine  # noqa
+from .executor import (HardwareProfile, JaxExecutor, StepTiming,  # noqa
+                       SyntheticExecutor)
+from .kv_cache import PagedKVCache  # noqa
+from .metrics import ServingMetrics, smape, smape_vec, summarize  # noqa
+from .request import Adapter, Request  # noqa
+from .scheduler import Scheduler, StepPlan  # noqa
+from .router import PlacementRouter, ReplicaPlan, RouterState  # noqa

@@ -1,0 +1,65 @@
+"""Serving metrics: throughput / ITL / TTFT + starvation detection."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from .request import Request
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    throughput: float          # output tokens / s
+    itl: float                 # mean inter-token latency (s)
+    ttft: float                # mean time-to-first-token (s)
+    ideal_throughput: float    # offered output tokens / s
+    duration: float
+    n_finished: int
+    n_preemptions: int
+    max_kv_used: float = 0.0
+    n_loads: int = 0
+
+    @property
+    def starved(self) -> bool:
+        """Paper definition: observed < 90% of ideal throughput."""
+        if self.ideal_throughput <= 0:
+            return False
+        return self.throughput < 0.9 * self.ideal_throughput
+
+
+def summarize(reqs: List[Request], duration: float,
+              offered_tokens: float, max_kv_used: float = 0.0,
+              n_loads: int = 0) -> ServingMetrics:
+    finished = [r for r in reqs if r.finished_at is not None]
+    out_tokens = sum(r.generated for r in reqs)
+    itls = [r.itl for r in finished if r.itl is not None]
+    ttfts = [r.ttft for r in reqs if r.ttft is not None]
+    return ServingMetrics(
+        throughput=out_tokens / duration if duration > 0 else 0.0,
+        itl=float(np.mean(itls)) if itls else 0.0,
+        ttft=float(np.mean(ttfts)) if ttfts else 0.0,
+        ideal_throughput=offered_tokens / duration if duration > 0 else 0.0,
+        duration=duration,
+        n_finished=len(finished),
+        n_preemptions=sum(r.n_preemptions for r in reqs),
+        max_kv_used=max_kv_used,
+        n_loads=n_loads,
+    )
+
+
+def smape(a: float, b: float) -> float:
+    """Symmetric mean absolute percentage error of two scalars (%)."""
+    if a == 0 and b == 0:
+        return 0.0
+    return 100.0 * abs(a - b) / ((abs(a) + abs(b)) / 2.0)
+
+
+def smape_vec(xs, ys) -> float:
+    xs, ys = np.asarray(xs, float), np.asarray(ys, float)
+    denom = (np.abs(xs) + np.abs(ys)) / 2.0
+    mask = denom > 0
+    if not mask.any():
+        return 0.0
+    return float(100.0 * np.mean(np.abs(xs - ys)[mask] / denom[mask]))

@@ -1,0 +1,138 @@
+"""Continuous-batching scheduler: FCFS + vLLM adapter-slot priority,
+greedy KV allocation with preemption-by-recompute.
+
+This class is shared verbatim by the real engine and the Digital Twin —
+the paper's DT replicates scheduling *logic* exactly (Fig. 8: "As vLLM, we
+use a FCFS policy and a greedy allocation of KV cache"); only step *times*
+and memory *capacity* differ (measured vs estimated).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Set
+
+from .adapter_cache import AdapterSlotCache
+from .kv_cache import PagedKVCache
+from .request import Request
+
+
+@dataclasses.dataclass
+class StepPlan:
+    admitted: List[Request]          # requests prefilling this step
+    preempted: List[Request]
+    cold_loads: List[int]            # adapter uids loaded from host this step
+    running: List[Request]           # full running batch (incl. admitted)
+
+    @property
+    def unique_adapters(self) -> Set[int]:
+        return {r.adapter for r in self.running}
+
+    @property
+    def prefill_tokens(self) -> int:
+        return sum(r.context_len for r in self.admitted)
+
+
+class Scheduler:
+    def __init__(self, kv: PagedKVCache, adapters: AdapterSlotCache,
+                 max_running: int = 256):
+        self.kv = kv
+        self.adapters = adapters
+        self.max_running = max_running
+        self.waiting: Deque[Request] = deque()
+        self.running: List[Request] = []
+
+    # ------------------------------------------------------------------ #
+    def add(self, reqs: List[Request]) -> None:
+        self.waiting.extend(reqs)
+
+    def finish(self, req: Request) -> None:
+        self.running.remove(req)
+        self.kv.free(req.uid)
+        self.adapters.unpin(req.adapter)
+
+    def _preempt_one(self) -> Optional[Request]:
+        """Evict the most recently arrived running request (recompute)."""
+        if not self.running:
+            return None
+        victim = max(self.running, key=lambda r: r.arrival)
+        self.running.remove(victim)
+        self.kv.free(victim.uid)
+        self.adapters.unpin(victim.adapter)
+        victim.n_preemptions += 1
+        self.waiting.appendleft(victim)
+        return victim
+
+    # ------------------------------------------------------------------ #
+    def schedule(self, now: float) -> StepPlan:
+        admitted: List[Request] = []
+        preempted: List[Request] = []
+        cold_loads: List[int] = []
+
+        # 1. greedy decode allocation for already-running requests;
+        #    preempt (newest first) on memory exhaustion.
+        for req in list(self.running):
+            while not self.kv.allocate(req.uid, 1):
+                # S-LoRA: idle adapter weights are evicted from the unified
+                # pool before any request is preempted
+                if self.adapters.dynamic and \
+                        self.adapters.evict_idle_lru() is not None:
+                    continue
+                victim = self._preempt_one()
+                if victim is None:
+                    break
+                preempted.append(victim)
+                if victim is req:
+                    break  # req preempted itself; it no longer decodes
+
+        # 2. admissions: FCFS, but when its adapter cannot get a slot,
+        #    skip and let later requests with loaded adapters through
+        #    (vLLM's loaded-adapter priority).  Requests preempted in THIS
+        #    step stay queued until the next step (no same-step thrash).
+        just_preempted = {r.uid for r in preempted}
+        skipped: List[Request] = []
+        while self.waiting and len(self.running) < self.max_running:
+            req = self.waiting[0]
+            if req.uid in just_preempted:
+                self.waiting.popleft()
+                skipped.append(req)
+                continue
+            need_slots = not self.adapters.is_loaded(req.adapter)
+            if need_slots and not self.adapters.can_load(req.adapter):
+                self.waiting.popleft()
+                skipped.append(req)
+                continue
+            if not self.kv.can_allocate(req.context_len + 1):
+                if self.adapters.dynamic and \
+                        self.adapters.evict_idle_lru() is not None:
+                    continue
+                break
+            self.waiting.popleft()
+            if self.adapters.load(req.adapter, now):
+                cold_loads.append(req.adapter)
+            self.adapters.pin(req.adapter)
+            self.kv.allocate(req.uid, req.context_len + 1)
+            req.admitted_at = now
+            self.running.append(req)
+            admitted.append(req)
+        # skipped requests rejoin the queue in FCFS order
+        for req in reversed(skipped):
+            self.waiting.appendleft(req)
+
+        for req in self.running:
+            self.adapters.touch(req.adapter, now)
+        return StepPlan(admitted=admitted, preempted=preempted,
+                        cold_loads=cold_loads, running=list(self.running))
+
+    # ------------------------------------------------------------------ #
+    @property
+    def n_waiting(self) -> int:
+        return len(self.waiting)
+
+    @property
+    def n_running(self) -> int:
+        return len(self.running)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)

@@ -1,0 +1,3 @@
+from .compression import compressed_grad_sync, quantized_psum  # noqa
+from .optimizer import AdamWConfig, adamw_init, adamw_update  # noqa
+from .train_lib import TrainConfig, init_train_state, make_train_step  # noqa

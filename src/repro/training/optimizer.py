@@ -1,0 +1,92 @@
+"""AdamW on raw pytrees (no optax offline), sharding-transparent.
+
+Moments are fp32 and inherit each parameter's sharding (elementwise update
+=> zero extra collectives under pjit).  The update runs in fp32 and casts
+back to the parameter dtype (bf16 master-less recipe; flip
+``master_weights=True`` to carry fp32 masters).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    master_weights: bool = False
+
+
+def adamw_init(params, cfg: AdamWConfig) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+    if cfg.master_weights:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))),
+                      tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip else 1.0
+    lr = _schedule(cfg, step)
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    src = state.get("master", params)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                        + cfg.weight_decay * pf)
+        return pf, m, v
+
+    flat_p, tdef = jax.tree.flatten(src)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    outs = [upd(p, g, m, v) for p, g, m, v in
+            zip(flat_p, flat_g, flat_m, flat_v)]
+    new_f32 = tdef.unflatten([o[0] for o in outs])
+    new_state = {
+        "step": step,
+        "m": tdef.unflatten([o[1] for o in outs]),
+        "v": tdef.unflatten([o[2] for o in outs]),
+    }
+    if cfg.master_weights:
+        new_state["master"] = new_f32
+    new_params = jax.tree.map(lambda nf, p: nf.astype(p.dtype),
+                              new_f32, params)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

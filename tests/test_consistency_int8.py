@@ -1,0 +1,48 @@
+"""int8 KV cache: decode logits stay within quantization tolerance of the
+bf16-cache reference (beyond-paper §Perf optimization)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import Model, ShardingPlan
+from repro.models.attention import quantize_kv
+from repro.models.transformer import pad_cache
+
+KEY = jax.random.PRNGKey(4)
+
+
+def test_quantize_kv_roundtrip_error():
+    x = jax.random.normal(KEY, (4, 8, 64), jnp.float32) * 3
+    q, s = quantize_kv(x)
+    recon = q.astype(jnp.float32) * s[..., None].astype(jnp.float32)
+    err = float(jnp.max(jnp.abs(recon - x)))
+    assert err <= float(jnp.max(s)) / 2 + 1e-5
+
+
+@pytest.mark.parametrize("arch", ["phi4_mini_3p8b", "qwen1p5_4b"])
+def test_int8_kv_decode_close_to_fp(arch):
+    cfg = dataclasses.replace(get_reduced(arch), dtype="float32")
+    m_pre = Model(cfg, ShardingPlan(mode="prefill"))
+    m_pre_q = Model(cfg, ShardingPlan(mode="prefill", kv_quant=True))
+    m_dec = Model(cfg, ShardingPlan(mode="decode"))
+    m_dec_q = Model(cfg, ShardingPlan(mode="decode", kv_quant=True))
+    params = m_pre.init(KEY)
+    lora = m_pre.init_lora(KEY, 4, 4)
+    b, s = 2, 24
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    idx = jnp.array([0, 1], jnp.int32)
+    _, cache = jax.jit(m_pre.prefill)(params, lora, tokens[:, :-1], idx)
+    _, cache_q = jax.jit(m_pre_q.prefill)(params, lora, tokens[:, :-1], idx)
+    ref, _ = jax.jit(m_dec.decode_step)(params, lora, pad_cache(cache, 4),
+                                        tokens[:, -1:], idx)
+    got, ncache = jax.jit(m_dec_q.decode_step)(
+        params, lora, pad_cache(cache_q, 4), tokens[:, -1:], idx)
+    # int8 caches stay int8 through the step
+    kv = ncache["segments"][0]["blocks"][0]
+    assert kv["k"].dtype == jnp.int8 and "k_scale" in kv
+    rel = float(jnp.max(jnp.abs(got - ref))) / \
+        (float(jnp.max(jnp.abs(ref))) + 1e-9)
+    assert rel < 2e-2, rel

@@ -1,0 +1,88 @@
+"""Digital Twin fidelity + estimator fitting (paper Table I left)."""
+import numpy as np
+import pytest
+
+from repro.core import (DigitalTwin, WorkloadSpec, collect_benchmark,
+                        collect_memmax, fit_estimators, generate_requests,
+                        make_adapter_pool)
+from repro.serving import (EngineConfig, HardwareProfile, ServingEngine,
+                           SyntheticExecutor, smape)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    profile = HardwareProfile()
+    n, slots = 24, 12
+    pool = make_adapter_pool(n, [8, 16, 32], [0.2, 0.1, 0.05])
+    ranks = {a.uid: a.rank for a in pool}
+    ex = SyntheticExecutor(profile, ranks, slots=slots, n_adapters=n, seed=0)
+    est = fit_estimators(collect_benchmark(ex, slots, n, ranks),
+                         collect_memmax(profile), slots, n)
+    return profile, pool, ranks, est, slots
+
+
+def test_estimator_recovery(fitted):
+    """Fitted Eq.(1) constants recover the hidden profile within noise."""
+    profile, _, _, est, _ = fitted
+    assert abs(est.model[1] - profile.m1) / profile.m1 < 0.15
+    assert abs(est.model[2] - profile.m2) / profile.m2 < 0.15
+    assert abs(est.adapters[1] - profile.a1) < 0.002
+    assert abs(est.load[1] - profile.load_cpu_per_rank) \
+        / profile.load_cpu_per_rank < 0.2
+
+
+def test_memmax_estimator_decreases_with_slots(fitted):
+    *_, est, _ = fitted
+    assert est.kv_capacity(8, 8) > est.kv_capacity(256, 32)
+
+
+def _real_run(profile, pool, ranks, slots, spec, reqs):
+    mean_rank = float(np.mean([a.rank for a in pool]))
+    cfg = EngineConfig(
+        kv_capacity_tokens=profile.kv_capacity(slots, mean_rank),
+        adapter_slots=slots)
+    eng = ServingEngine(cfg, SyntheticExecutor(
+        profile, ranks, slots=slots, n_adapters=len(pool), seed=9))
+    return eng.run(reqs, horizon=spec.horizon)
+
+
+def test_dt_full_mode_close_to_real(fitted):
+    profile, pool, ranks, est, slots = fitted
+    spec = WorkloadSpec(adapters=pool, dataset="sharegpt", horizon=200.0,
+                        seed=11)
+    real = _real_run(profile, pool, ranks, slots, spec,
+                     generate_requests(spec))
+    dt = DigitalTwin(est, mode="full")
+    sim = dt.simulate(spec, slots=slots,
+                      requests=generate_requests(spec)).metrics
+    assert smape(sim.throughput, real.throughput) < 3.0
+    assert smape(sim.itl, real.itl) < 10.0
+
+
+def test_dt_mean_mode_reasonable(fitted):
+    profile, pool, ranks, est, slots = fitted
+    spec = WorkloadSpec(adapters=pool, dataset="sharegpt", horizon=200.0,
+                        seed=11)
+    real = _real_run(profile, pool, ranks, slots, spec,
+                     generate_requests(spec))
+    sim = DigitalTwin(est, mode="mean").simulate(spec, slots=slots).metrics
+    # paper: mean-mode throughput SMAPE ~5%, TTFT much worse (~18%)
+    assert smape(sim.throughput, real.throughput) < 15.0
+    assert smape(sim.itl, real.itl) < 20.0
+
+
+def test_dt_requires_no_gpu_and_is_fast(fitted):
+    _, pool, _, est, slots = fitted
+    spec = WorkloadSpec(adapters=pool, dataset="medium", horizon=120.0)
+    res = DigitalTwin(est, mode="mean").simulate(spec, slots=slots)
+    # simulated 120s of serving in a tiny fraction of real time
+    assert res.sim_wall_time < 30.0
+    assert res.metrics.duration > 0
+
+
+def test_dt_ideal_throughput_bound(fitted):
+    """DT throughput never exceeds offered load by more than jitter."""
+    _, pool, _, est, slots = fitted
+    spec = WorkloadSpec(adapters=pool, dataset="medium", horizon=150.0)
+    m = DigitalTwin(est, mode="mean").simulate(spec, slots=slots).metrics
+    assert m.throughput <= 1.2 * m.ideal_throughput + 1.0

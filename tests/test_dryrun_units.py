@@ -1,0 +1,102 @@
+"""Dry-run machinery units: HLO collective parsing, probe-depth math,
+roofline terms, small-mesh compile of a reduced cell (subprocess)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.roofline import (CellCost, RooflineTerms, collective_bytes,
+                                   model_flops_for)
+from repro.models.config import SHAPES
+
+HLO = """
+HloModule test
+%x.1 = bf16[128,256]{1,0} parameter(0)
+%ag.2 = bf16[1024,256]{1,0} all-gather(%x.1), dimensions={0}
+%ar.3 = f32[64]{0} all-reduce(%y.9), to_apply=%add
+%y.9 = f32[64]{0} parameter(1)
+%cp.4 = bf16[128,256]{1,0} collective-permute(%x.1), source_target_pairs={{0,1}}
+%rs = f32[16]{0} reduce-scatter(%y.9), dimensions={0}
+"""
+
+
+def test_collective_bytes_parser():
+    out = collective_bytes(HLO)
+    assert out["all-gather"] == 128 * 256 * 2
+    assert out["all-reduce"] == 64 * 4
+    assert out["collective-permute"] == 128 * 256 * 2
+    assert out["reduce-scatter"] == 64 * 4
+    assert out["total"] == sum(
+        v for k, v in out.items() if k != "total")
+
+
+def test_probe_depths_exact_for_all_archs():
+    from repro.launch.dryrun import probe_depths
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        pd = probe_depths(cfg)
+        plen = len(cfg.block_pattern)
+        # probe2 - probe1 == exactly one pattern repeat
+        assert pd["probe2"] - pd["probe1"] == plen
+        # extrapolation reconstructs the full depth
+        assert pd["probe1"] + pd["extra_repeats"] * plen == cfg.n_layers
+
+
+def test_cell_cost_extrapolation_linear():
+    c1 = CellCost(flops=10.0, bytes_accessed=100.0,
+                  coll={"all-gather": 4, "total": 4})
+    c2 = CellCost(flops=16.0, bytes_accessed=130.0,
+                  coll={"all-gather": 6, "total": 6})
+    full = c1.extrapolate(c2, extra_repeats=10)
+    assert full.flops == 10 + 10 * 6
+    assert full.bytes_accessed == 100 + 10 * 30
+    assert full.coll["all-gather"] == 4 + 10 * 2
+
+
+def test_roofline_terms_and_bottleneck():
+    cost = CellCost(flops=197e12, bytes_accessed=819e9 * 2,
+                    coll={"total": 50e9 * 3})
+    t = RooflineTerms.from_cost(cost, n_chips=4, model_flops=4 * 197e12)
+    assert abs(t.compute_s - 1.0) < 1e-9
+    assert abs(t.memory_s - 2.0) < 1e-9
+    assert abs(t.collective_s - 3.0) < 1e-9
+    assert t.bottleneck == "collective"
+    assert 0 < t.roofline_fraction <= 1.0
+
+
+def test_model_flops_positive_and_ordered():
+    cfg = get_config("internlm2_20b")
+    f_train = model_flops_for(cfg, SHAPES["train_4k"])
+    f_dec = model_flops_for(cfg, SHAPES["decode_32k"])
+    assert f_train > f_dec > 0
+
+
+@pytest.mark.slow
+def test_reduced_cell_compiles_on_small_mesh():
+    """A reduced config lowers+compiles on a (2,2) placeholder mesh."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, "src")
+import jax
+from repro.configs import get_reduced
+from repro.models.config import ShapeConfig
+from repro.launch.mesh import _mk
+from repro.launch.steps import build_step
+cfg = get_reduced("gemma3_1b")
+shape = ShapeConfig("t", 64, 4, "train")
+mesh = _mk((2, 2), ("data", "model"))
+b = build_step(cfg, shape, mesh, unroll=False)
+c = jax.jit(b.fn, in_shardings=b.in_shardings, out_shardings=b.out_shardings,
+            donate_argnums=b.donate_argnums).lower(*b.args).compile()
+assert c.memory_analysis() is not None
+print("compiled OK")
+"""
+    proc = subprocess.run([sys.executable, "-c", code], text=True,
+                          capture_output=True, timeout=600,
+                          cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "compiled OK" in proc.stdout

@@ -1,0 +1,133 @@
+"""Pallas kernel validation: interpret=True vs pure-jnp oracles, over
+shape/dtype sweeps + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.bgmv import bgmv
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.sgmv import sgmv
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _lora_data(t, d, r, o, n, dtype):
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (t, d), dtype)
+    a = (jax.random.normal(ks[1], (n, d, r), jnp.float32) * 0.1).astype(dtype)
+    b = (jax.random.normal(ks[2], (n, r, o), jnp.float32) * 0.1).astype(dtype)
+    idx = jax.random.randint(ks[3], (t,), 0, n)
+    return x, a, b, idx
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,d,r,o,n", [
+    (4, 64, 8, 64, 2), (8, 128, 16, 256, 4), (16, 256, 32, 128, 8),
+    (1, 512, 4, 512, 3),
+])
+def test_bgmv_matches_ref(t, d, r, o, n, dtype):
+    x, a, b, idx = _lora_data(t, d, r, o, n, dtype)
+    got = bgmv(x, a, b, idx, 1.5, interpret=True)
+    want = ref.lora_ref(x, a, b, idx, 1.5)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,d,r,o,n", [
+    (256, 64, 8, 64, 2), (300, 128, 16, 128, 3), (512, 64, 8, 256, 8),
+])
+def test_sgmv_matches_ref(t, d, r, o, n, dtype):
+    x, a, b, idx = _lora_data(t, d, r, o, n, dtype)
+    got = sgmv(x, a, b, idx, 1.0, interpret=True)
+    want = ref.lora_ref(x, a, b, idx, 1.0)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,d,s", [
+    (2, 8, 2, 64, 512), (3, 4, 4, 128, 256), (2, 4, 1, 64, 300),
+    (1, 16, 8, 128, 1024),
+])
+def test_flash_decode_matches_ref(b, h, kv, d, s, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, d), dtype)
+    length = jnp.arange(1, b + 1) * (s // (b + 1)) + 1
+    got = flash_decode(q, k, v, length, interpret=True)
+    want = ref.flash_decode_ref(q, k, v, length)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_ops_dispatch_cpu_uses_ref():
+    x, a, b, idx = _lora_data(6, 32, 4, 32, 2, jnp.float32)
+    got = ops.lora_apply(x, a, b, idx)
+    want = ref.lora_ref(x, a, b, idx, 1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_ops_lora_apply_broadcasts_request_idx():
+    """(B, S, d) input with per-request idx -> per-token application."""
+    b, s, d, r, o, n = 2, 5, 16, 4, 16, 3
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (b, s, d), jnp.float32)
+    a = jax.random.normal(ks[1], (n, d, r), jnp.float32)
+    bb = jax.random.normal(ks[2], (n, r, o), jnp.float32)
+    idx = jnp.array([0, 2], jnp.int32)
+    got = ops.lora_apply(x, a, bb, idx)
+    for i in range(b):
+        want = ref.lora_ref(x[i], a, bb, jnp.full((s,), idx[i]), 1.0)
+        np.testing.assert_allclose(got[i], want, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------- #
+# property-based
+# --------------------------------------------------------------------- #
+
+@settings(max_examples=12, deadline=None)
+@given(t=st.integers(1, 16), n=st.integers(1, 6),
+       r=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2 ** 16))
+def test_bgmv_property_random_shapes(t, n, r, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    d, o = 64, 96
+    x = jax.random.normal(ks[0], (t, d), jnp.float32)
+    a = jax.random.normal(ks[1], (n, d, r), jnp.float32)
+    b = jax.random.normal(ks[2], (n, r, o), jnp.float32)
+    idx = jax.random.randint(ks[3], (t,), 0, n)
+    got = bgmv(x, a, b, idx, 1.0, interpret=True)
+    want = ref.lora_ref(x, a, b, idx, 1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.integers(2, 600), seed=st.integers(0, 2 ** 16))
+def test_flash_decode_property_lengths(s, seed):
+    """Invariant: output depends only on the first `length` positions."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    b, h, kv, d = 2, 4, 2, 32
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, d), jnp.float32)
+    length = int(jax.random.randint(ks[3], (), 1, s + 1))
+    out1 = flash_decode(q, k, v, length, interpret=True)
+    # scramble the masked tail: output must not change
+    noise = jax.random.normal(ks[3], k.shape, jnp.float32) * 100
+    mask = (jnp.arange(s) >= length)[None, :, None, None]
+    k2 = jnp.where(mask, noise, k)
+    v2 = jnp.where(mask, noise, v)
+    out2 = flash_decode(q, k2, v2, length, interpret=True)
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,97 @@
+"""Placement search properties (paper Fig. 5) + interpretable models."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DecisionTree, LinearRegression, RandomForest,
+                        collect_benchmark, collect_memmax, fit_estimators,
+                        find_optimal_placement, make_adapter_pool)
+from repro.core.dataset import encode_features, FEATURE_NAMES
+from repro.serving import HardwareProfile, SyntheticExecutor
+
+
+@pytest.fixture(scope="module")
+def est():
+    profile = HardwareProfile(noise=0.0)
+    n, slots = 24, 12
+    pool = make_adapter_pool(n, [8, 16, 32], [0.2, 0.1, 0.05])
+    ranks = {a.uid: a.rank for a in pool}
+    ex = SyntheticExecutor(profile, ranks, slots=slots, n_adapters=n, seed=0)
+    return fit_estimators(collect_benchmark(ex, slots, n, ranks),
+                          collect_memmax(profile), slots, n)
+
+
+def test_placement_finds_feasible_point(est):
+    pool = make_adapter_pool(64, [8], [0.1])
+    res = find_optimal_placement(est, pool, "medium", horizon=100.0)
+    assert res.best is not None
+    assert 1 <= res.n_adapters <= 64
+    assert 1 <= res.slots <= res.n_adapters
+    assert res.throughput > 0
+    assert not res.best.starved
+
+
+def test_placement_higher_rate_fewer_adapters(est):
+    """Paper Fig. 5: higher per-adapter rates saturate the node with
+    fewer adapters but higher max throughput."""
+    lo = find_optimal_placement(est, make_adapter_pool(96, [8], [0.05]),
+                                "medium", horizon=100.0)
+    hi = find_optimal_placement(est, make_adapter_pool(96, [8], [1.6]),
+                                "medium", horizon=100.0)
+    assert hi.n_adapters <= lo.n_adapters
+    assert hi.throughput >= lo.throughput
+
+
+def test_placement_larger_ranks_not_better(est):
+    small = find_optimal_placement(est, make_adapter_pool(64, [8], [0.1]),
+                                   "medium", horizon=100.0)
+    large = find_optimal_placement(est, make_adapter_pool(64, [32], [0.1]),
+                                   "medium", horizon=100.0)
+    assert large.throughput <= small.throughput * 1.05
+
+
+# --------------------------------------------------------------------- #
+# interpretable models
+# --------------------------------------------------------------------- #
+
+def test_tree_beats_linear_on_stepwise_target():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-1, 1, (400, 3))
+    y = np.where(x[:, 0] > 0, 10.0, -10.0) + \
+        np.where(x[:, 1] > 0.5, 5.0, 0.0)
+    tree = DecisionTree(max_depth=4).fit(x[:300], y[:300])
+    lin = LinearRegression().fit(x[:300], y[:300])
+    err_t = np.mean((tree.predict(x[300:])[:, 0] - y[300:]) ** 2)
+    err_l = np.mean((lin.predict(x[300:]) - y[300:]) ** 2)
+    assert err_t < err_l * 0.5
+
+
+def test_forest_multioutput_and_rules():
+    rng = np.random.default_rng(1)
+    x = rng.uniform(0, 1, (300, 4))
+    y = np.stack([x[:, 0] * 3, (x[:, 1] > 0.5).astype(float)], axis=1)
+    rf = RandomForest(n_trees=5, max_depth=4).fit(x, y)
+    pred = rf.predict(x)
+    assert pred.shape == (300, 2)
+    assert np.corrcoef(pred[:, 0], y[:, 0])[0, 1] > 0.8
+    tree = DecisionTree(max_depth=3).fit(x, y)
+    rules = tree.rules(feature_names=list("abcd"),
+                       target_names=["t1", "t2"])
+    assert rules and all("THEN" in r for r in rules)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_tree_predicts_constant_exactly(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0, 1, (50, 2))
+    y = np.full(50, 7.5)
+    tree = DecisionTree(max_depth=3).fit(x, y)
+    np.testing.assert_allclose(tree.predict(x)[:, 0], 7.5)
+
+
+def test_feature_encoding_shape():
+    f = encode_features([0.1, 0.2], [8, 16],
+                        {"in_mean": 250, "in_std": 0,
+                         "out_mean": 231, "out_std": 0})
+    assert f.shape == (len(FEATURE_NAMES),)

@@ -1,0 +1,166 @@
+"""Serving engine semantics: scheduler, adapter slots, KV, preemption,
+metrics, starvation."""
+import pytest
+
+from repro.serving import (AdapterSlotCache, EngineConfig, PagedKVCache,
+                           Request, Scheduler, ServingEngine, StepTiming,
+                           SyntheticExecutor, HardwareProfile, smape)
+from repro.serving.scheduler import StepPlan
+from repro.core import WorkloadSpec, generate_requests, make_adapter_pool
+
+
+def _req(uid, adapter=0, arrival=0.0, p=4, o=4):
+    return Request(uid=uid, adapter=adapter, arrival=arrival,
+                   prompt_len=p, output_len=o)
+
+
+# --------------------------------------------------------------------- #
+# KV cache
+# --------------------------------------------------------------------- #
+
+def test_kv_greedy_alloc_and_free():
+    kv = PagedKVCache(capacity_tokens=64, block_size=16)
+    assert kv.total_blocks == 4
+    assert kv.allocate(1, 17)          # 2 blocks
+    assert kv.free_blocks == 2
+    assert kv.allocate(1, 15)          # fills block 2 exactly
+    assert kv.free_blocks == 2
+    assert kv.allocate(2, 33) is False  # needs 3 blocks -> only 2 left
+    kv.free(1)
+    assert kv.free_blocks == 4
+
+
+def test_kv_incremental_token_blocks():
+    kv = PagedKVCache(capacity_tokens=32, block_size=16)
+    assert kv.allocate(7, 16)
+    assert kv.free_blocks == 1
+    assert kv.allocate(7, 1)           # 17th token -> new block
+    assert kv.free_blocks == 0
+
+
+# --------------------------------------------------------------------- #
+# adapter slots (LRU + pinning)
+# --------------------------------------------------------------------- #
+
+def test_adapter_lru_eviction_and_pinning():
+    ac = AdapterSlotCache(slots=2)
+    assert ac.load(1, now=0.0) is True      # cold
+    assert ac.load(2, now=1.0) is True
+    ac.pin(1)
+    assert ac.can_load(3)                   # 2 evictable
+    ac.pin(2)
+    assert not ac.can_load(3)               # all pinned
+    ac.unpin(1)
+    ac.load(3, now=2.0)                     # evicts LRU unpinned = 1
+    assert ac.is_loaded(3) and not ac.is_loaded(1)
+    assert ac.evict_count == 1
+
+
+# --------------------------------------------------------------------- #
+# scheduler
+# --------------------------------------------------------------------- #
+
+def _sched(kv_tokens=1024, slots=2, max_running=8):
+    kv = PagedKVCache(kv_tokens, block_size=16)
+    ac = AdapterSlotCache(slots)
+    return Scheduler(kv, ac, max_running)
+
+
+def test_fcfs_admission_order():
+    s = _sched()
+    reqs = [_req(i, adapter=i % 2, arrival=i * 0.1) for i in range(4)]
+    s.add(reqs)
+    plan = s.schedule(now=1.0)
+    assert [r.uid for r in plan.admitted] == [0, 1, 2, 3]
+
+
+def test_loaded_adapter_priority_when_slots_full():
+    """vLLM policy: with no free slots, a later request whose adapter is
+    loaded is admitted ahead of an earlier one that needs a new slot."""
+    s = _sched(slots=1)
+    r0 = _req(0, adapter=0, arrival=0.0)
+    s.add([r0])
+    s.schedule(now=0.0)                    # adapter 0 occupies the slot
+    r1 = _req(1, adapter=1, arrival=1.0)   # needs a slot (pinned by r0)
+    r2 = _req(2, adapter=0, arrival=2.0)   # adapter already loaded
+    s.add([r1, r2])
+    plan = s.schedule(now=2.0)
+    assert [r.uid for r in plan.admitted] == [2]
+    assert r1 in list(s.waiting)
+
+
+def test_preemption_on_memory_exhaustion():
+    s = _sched(kv_tokens=48, slots=4)      # 3 blocks of 16
+    a = _req(0, arrival=0.0, p=16, o=100)  # 2 blocks (17 tokens)
+    b = _req(1, arrival=1.0, p=14, o=100)  # 1 block
+    s.add([a, b])
+    s.schedule(now=1.0)
+    assert s.n_running == 2
+    # decode until memory forces preemption of the newest request (b)
+    preempted = []
+    for _ in range(40):
+        plan = s.schedule(now=2.0)
+        for r in plan.running:
+            r.generated += 1
+        preempted += plan.preempted
+        if preempted:
+            break
+    assert preempted and preempted[0].uid == 1
+    assert b.n_preemptions == 1 and b in list(s.waiting)
+
+
+def test_scheduler_max_running():
+    s = _sched(max_running=2)
+    s.add([_req(i) for i in range(5)])
+    plan = s.schedule(0.0)
+    assert len(plan.admitted) == 2
+
+
+# --------------------------------------------------------------------- #
+# engine end-to-end on the synthetic executor
+# --------------------------------------------------------------------- #
+
+def _run_engine(rate, n_adapters=8, slots=8, horizon=120.0, dataset="small"):
+    profile = HardwareProfile(noise=0.0)
+    pool = make_adapter_pool(n_adapters, [8], [rate])
+    ranks = {a.uid: a.rank for a in pool}
+    spec = WorkloadSpec(adapters=pool, dataset=dataset, horizon=horizon,
+                        seed=3)
+    reqs = generate_requests(spec)
+    cfg = EngineConfig(kv_capacity_tokens=profile.kv_capacity(slots, 8),
+                       adapter_slots=slots)
+    eng = ServingEngine(cfg, SyntheticExecutor(
+        profile, ranks, slots=slots, n_adapters=n_adapters))
+    return eng.run(reqs, horizon=horizon), reqs
+
+
+def test_engine_low_rate_not_starved():
+    m, _ = _run_engine(rate=0.05)
+    assert not m.starved
+    assert m.n_finished > 0
+    assert m.ttft > 0 and m.itl > 0
+
+
+def test_engine_overload_starves():
+    m, _ = _run_engine(rate=20.0, n_adapters=64, slots=4)
+    assert m.starved
+
+
+def test_engine_request_conservation():
+    m, reqs = _run_engine(rate=0.05)
+    for r in reqs:
+        if r.finished_at is not None:
+            assert r.generated == r.output_len
+            assert len(r.token_times) >= r.output_len
+            assert r.first_token_at >= r.arrival
+
+
+def test_throughput_monotone_in_rate():
+    lo, _ = _run_engine(rate=0.02)
+    hi, _ = _run_engine(rate=0.2)
+    assert hi.throughput > lo.throughput
+
+
+def test_smape_symmetric():
+    assert smape(1.0, 2.0) == smape(2.0, 1.0)
+    assert smape(5.0, 5.0) == 0.0

@@ -1,0 +1,23 @@
+"""Multi-device (8 placeholder hosts) equivalence tests.
+
+Each case runs in a subprocess because the device count must be set
+before jax initializes (the main test process stays single-device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from tests.sharded_cases import CASES
+
+_SCRIPT = os.path.join(os.path.dirname(__file__), "sharded_cases.py")
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_sharded_case(case):
+    proc = subprocess.run(
+        [sys.executable, _SCRIPT, case],
+        capture_output=True, text=True, timeout=900,
+        env={**os.environ, "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, \
+        f"{case} failed:\n{proc.stdout[-2000:]}\n{proc.stderr[-3000:]}"

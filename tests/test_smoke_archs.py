@@ -1,0 +1,100 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+train step + prefill + decode on CPU; output shapes + finiteness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.models import Model, ShardingPlan, applicable_shapes
+from repro.models.config import SHAPES
+from repro.models.layers import pad_vocab
+from repro.models.transformer import pad_cache
+from repro.training import (AdamWConfig, TrainConfig, init_train_state,
+                            make_train_step)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    batch = {"tokens": jax.random.randint(KEY, (b, s + 1), 0,
+                                          cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["tokens"] = batch["tokens"][:, : s - cfg.n_image_tokens + 1]
+        batch["img_embeds"] = jax.random.normal(
+            KEY, (b, cfg.n_image_tokens, cfg.d_model), cfg.jnp_dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    # every full config must carry the assigned dimensions
+    assert cfg.n_layers >= 16 and cfg.d_model >= 1024
+    assert cfg.vocab_size >= 2048
+    if cfg.family in ("moe",):
+        assert cfg.n_experts == 64 and cfg.top_k in (6, 8)
+    if cfg.family == "ssm":
+        assert cfg.ssm_state == 128 and cfg.is_attention_free
+    if cfg.family == "hybrid":
+        assert "rglru" in cfg.block_pattern and "local" in cfg.block_pattern
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = get_reduced(arch)
+    model = Model(cfg, ShardingPlan(mode="train"))
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-3, warmup_steps=2))
+    params, opt = init_train_state(model, KEY, tcfg)
+    step = jax.jit(make_train_step(model, tcfg))
+    batch = _batch(cfg)
+    params2, opt2, info = step(params, opt, batch)
+    assert jnp.isfinite(info["loss"])
+    assert jnp.isfinite(info["grad_norm"])
+    # params actually changed
+    leaves_a = jax.tree.leaves(params)
+    leaves_b = jax.tree.leaves(params2)
+    assert any(
+        not jnp.allclose(a.astype(jnp.float32), b.astype(jnp.float32))
+        for a, b in zip(leaves_a, leaves_b))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_smoke(arch):
+    cfg = get_reduced(arch)
+    m_pre = Model(cfg, ShardingPlan(mode="prefill"))
+    m_dec = Model(cfg, ShardingPlan(mode="decode"))
+    params = m_pre.init(KEY)
+    lora = m_pre.init_lora(KEY, 4, 4)
+    b, s = 2, 24
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    kwargs = {}
+    if cfg.family == "vlm":
+        kwargs["img_embeds"] = jax.random.normal(
+            KEY, (b, cfg.n_image_tokens, cfg.d_model), cfg.jnp_dtype)
+    idx = jnp.array([0, 3], jnp.int32)
+    logits, cache = jax.jit(m_pre.prefill)(params, lora, tokens, idx,
+                                           **kwargs)
+    assert logits.shape == (b, pad_vocab(cfg.vocab_size))
+    assert jnp.isfinite(logits).all()
+    cache = pad_cache(cache, 4)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    step = jax.jit(m_dec.decode_step)
+    for _ in range(3):
+        logits, cache = step(params, lora, cache, tok, idx)
+        assert jnp.isfinite(logits).all()
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    assert int(cache["pos"]) == (s if cfg.family != "vlm"
+                                 else s + cfg.n_image_tokens) + 3
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_shape_applicability(arch):
+    cfg = get_config(arch)
+    shapes = {s.name for s in applicable_shapes(cfg)}
+    assert {"train_4k", "prefill_32k", "decode_32k"} <= shapes
+    if arch in ("gemma3_1b", "mamba2_2p7b", "recurrentgemma_9b"):
+        assert "long_500k" in shapes
+    else:
+        assert "long_500k" not in shapes

@@ -1,0 +1,27 @@
+"""End-to-end behaviour: the full paper pipeline on a small scale —
+benchmark -> fit -> DT -> dataset -> model -> recommend -> route."""
+import numpy as np
+
+from repro.core import build_pipeline, make_adapter_pool
+from repro.core.workload import WorkloadSpec
+from repro.serving import PlacementRouter
+
+
+def test_full_pipeline_end_to_end():
+    pipe = build_pipeline(n_scenarios=8, max_adapters=32, horizon=60.0)
+    # estimators exist and are sane
+    assert pipe.est.lat_model(8) > pipe.est.lat_model(1) > 0
+    assert pipe.est.lat_adapters(8) > 1.0
+    rec = pipe.recommend([0.2, 0.1], [8, 16],
+                         {"in_mean": 250, "in_std": 0,
+                          "out_mean": 231, "out_std": 0})
+    assert rec["served_adapters"] >= 1
+    assert rec["adapter_slots"] >= 1
+    assert rec["throughput"] > 0
+    assert rec["inference_ms"] < 50.0      # paper: ~0.12ms
+
+    router = PlacementRouter(pipe, n_replicas=2)
+    pool = make_adapter_pool(20, [8, 16], [0.2, 0.1])
+    state = router.plan(pool, {"in_mean": 250, "in_std": 0,
+                               "out_mean": 231, "out_std": 0})
+    assert sum(len(p.adapters) for p in state.plans) == 20

@@ -1,0 +1,90 @@
+"""Workload generation properties + multi-replica router behaviour."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (WorkloadSpec, generate_requests, make_adapter_pool,
+                        resample_requests)
+from repro.serving import PlacementRouter
+from repro.serving.request import Adapter
+
+
+@settings(max_examples=10, deadline=None)
+@given(rate=st.sampled_from([0.1, 0.5, 2.0]), seed=st.integers(0, 1000))
+def test_poisson_arrival_rate(rate, seed):
+    spec = WorkloadSpec(adapters=make_adapter_pool(1, [8], [rate]),
+                        horizon=400.0, seed=seed)
+    reqs = generate_requests(spec)
+    observed = len(reqs) / spec.horizon
+    assert abs(observed - rate) < 4 * np.sqrt(rate / spec.horizon) + 0.05
+
+
+def test_requests_sorted_and_adapter_tagged():
+    pool = make_adapter_pool(6, [8, 16], [0.5])
+    spec = WorkloadSpec(adapters=pool, horizon=60.0, seed=1)
+    reqs = generate_requests(spec)
+    assert all(a.arrival <= b.arrival for a, b in zip(reqs, reqs[1:]))
+    assert {r.adapter for r in reqs} <= {a.uid for a in pool}
+
+
+def test_dataset_profiles_fixed_lengths():
+    spec = WorkloadSpec(adapters=make_adapter_pool(2, [8], [1.0]),
+                        dataset="medium", horizon=30.0, seed=0)
+    reqs = generate_requests(spec)
+    assert all(r.prompt_len == 250 and r.output_len == 231 for r in reqs)
+
+
+def test_mean_mode_resampling_matches_moments():
+    spec = WorkloadSpec(adapters=make_adapter_pool(4, [8], [2.0]),
+                        dataset="sharegpt", horizon=400.0, seed=0)
+    stats = spec.length_stats()
+    reqs = resample_requests(spec, stats)
+    outs = np.array([r.output_len for r in reqs])
+    assert abs(outs.mean() - stats["out_mean"]) / stats["out_mean"] < 0.25
+
+
+# --------------------------------------------------------------------- #
+# router
+# --------------------------------------------------------------------- #
+
+class FakePipeline:
+    def recommend(self, rates, ranks, stats):
+        return {"throughput": 100.0 * len(rates),
+                "served_adapters": 10, "adapter_slots": 5,
+                "inference_ms": 0.1}
+
+
+STATS = {"in_mean": 250, "in_std": 0, "out_mean": 231, "out_std": 0}
+
+
+def test_router_packs_and_routes():
+    router = PlacementRouter(FakePipeline(), n_replicas=3)
+    pool = make_adapter_pool(24, [8], [0.1])
+    state = router.plan(pool, STATS)
+    sizes = [len(p.adapters) for p in state.plans]
+    assert sum(sizes) == 24
+    assert max(sizes) - min(sizes) <= 10          # capacity-bounded spread
+    for a in pool:
+        rep = router.route(a.uid)
+        assert a.uid in [x.uid for x in state.plans[rep].adapters]
+
+
+def test_router_failure_repacks_to_survivors():
+    router = PlacementRouter(FakePipeline(), n_replicas=3)
+    pool = make_adapter_pool(12, [8], [0.1])
+    router.plan(pool, STATS)
+    state = router.report_failure(1, pool, STATS)
+    assert not state.plans[1].alive and not state.plans[1].adapters
+    assert sum(len(p.adapters) for p in state.plans) == 12
+    rep = router.route(pool[0].uid)
+    assert state.plans[rep].alive
+
+
+def test_router_straggler_detection():
+    router = PlacementRouter(FakePipeline(), n_replicas=3,
+                             straggler_factor=2.0)
+    router.plan(make_adapter_pool(6, [8], [0.1]), STATS)
+    bad = router.observe_itl({0: 0.03, 1: 0.032, 2: 0.30})
+    assert bad == [2]
+    # new traffic avoids the straggler
+    assert all(router.route(uid) != 2 for uid in range(100, 120))
