@@ -3,8 +3,14 @@ fitted estimators (creation phase), CSV output helpers."""
 from __future__ import annotations
 
 import functools
+import os
 import sys
 import time
+
+
+def is_smoke() -> bool:
+    """True when benchmarks run in the CI smoke path (tiny sizes)."""
+    return os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
 
 sys.path.insert(0, "src")
 

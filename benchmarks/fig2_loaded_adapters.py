@@ -2,7 +2,7 @@
 (memory overhead).  Uses the Mem_max estimator + saturation workloads."""
 from __future__ import annotations
 
-from .common import CsvOut, fitted_estimators, profile
+from .common import CsvOut, fitted_estimators
 from repro.core import DigitalTwin, WorkloadSpec, make_adapter_pool
 
 

@@ -2,13 +2,11 @@
 running batch (compute overhead Lat_adapters)."""
 from __future__ import annotations
 
-from .common import CsvOut, fitted_estimators, profile
-from repro.core.estimators import _mk_plan
+from .common import CsvOut, fitted_estimators
 
 
 def main(out: CsvOut) -> None:
     est = fitted_estimators()
-    p = profile()
     r_run = 64
     base = est.lat_model(r_run) * est.lat_adapters(0)
     for a in (0, 1, 2, 4, 8, 16, 32, 64):

@@ -2,7 +2,6 @@
 adapters under two rates — starvation at high rate, healthy at low rate."""
 from __future__ import annotations
 
-import numpy as np
 
 from .common import CsvOut, fitted_estimators
 from repro.core import DigitalTwin, WorkloadSpec, make_adapter_pool

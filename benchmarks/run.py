@@ -3,10 +3,16 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig2,table1_dt]
+
+``--smoke`` is the CI path: every benchmark module is imported (so
+scripts cannot silently rot) and a fast subset runs end-to-end with
+tiny sizes (``REPRO_BENCH_SMOKE=1``, see ``common.is_smoke``).
 """
 from __future__ import annotations
 
 import argparse
+import importlib
+import os
 import sys
 import traceback
 
@@ -22,24 +28,50 @@ BENCHES = (
     "fig6_slots_timeline",
     "fig7_slots_and_dynamic",
     "fig9_scale_384",
+    "fig_cluster_scaling",
     "table1_dt_accuracy",
     "table1_placement_model",
     "kernels_bench",
     "roofline_report",
 )
 
+# benchmarks cheap enough to execute end-to-end in the CI smoke gate
+SMOKE_BENCHES = (
+    "fig2_loaded_adapters",
+    "fig4_loading",
+    "fig_cluster_scaling",
+)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--smoke", action="store_true",
+                    help="import every benchmark, run the fast subset "
+                         "with tiny sizes (CI gate)")
     args = ap.parse_args()
     only = [s.strip() for s in args.only.split(",") if s.strip()]
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
     print("name,us_per_call,derived")
     failures = 0
     for name in BENCHES:
         if only and not any(name.startswith(o) for o in only):
             continue
-        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+        except Exception as e:
+            failures += 1
+            print(f"{name}/IMPORT_ERROR,0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+            continue
+        if not callable(getattr(mod, "main", None)):
+            failures += 1
+            print(f"{name}/NO_MAIN,0,missing main(out)")
+            continue
+        if args.smoke and name not in SMOKE_BENCHES:
+            print(f"{name}/IMPORT_OK,0,smoke-skipped")
+            continue
         out = CsvOut(name)
         try:
             mod.main(out)

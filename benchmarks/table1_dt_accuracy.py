@@ -8,7 +8,7 @@ import time
 
 import numpy as np
 
-from .common import CsvOut, fitted_estimators, profile, run_real
+from .common import CsvOut, fitted_estimators, run_real
 from repro.core import DigitalTwin, WorkloadSpec, generate_requests, \
     make_adapter_pool
 from repro.serving import smape

@@ -9,18 +9,17 @@ import time
 
 import numpy as np
 
-from .common import CsvOut, fitted_estimators, profile, run_real
-from repro.core import (MODEL_ZOO, WorkloadSpec, find_optimal_placement,
-                        label_scenarios, make_adapter_pool, scenario_grid)
+from .common import CsvOut, fitted_estimators, run_real
+from repro.core import (MODEL_ZOO, WorkloadSpec, label_scenarios,
+                        scenario_grid)
 from repro.core.dataset import TARGET_NAMES, encode_features
-from repro.serving import (EngineConfig, ServingEngine, SyntheticExecutor,
-                           smape_vec)
+from repro.serving import smape_vec
 
 
 def _real_label(scenario, est, max_adapters=96, horizon=120.0):
     """Ground-truth placement measured on the REAL engine (not the DT),
     over the same (N, G) grid the DT labeller sweeps."""
-    from repro.core.placement import PlacementPoint, default_slot_grid
+    from repro.core.placement import default_slot_grid
     pool = scenario.pool(max_adapters)
     best = None
     n_grid = sorted({max(1, max_adapters // k) for k in (16, 8, 4, 3, 2)}

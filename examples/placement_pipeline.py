@@ -11,7 +11,6 @@ import time
 
 sys.path.insert(0, "src")
 
-import numpy as np  # noqa: E402
 
 from repro.core import build_pipeline  # noqa: E402
 from repro.core.dataset import FEATURE_NAMES, TARGET_NAMES  # noqa: E402

@@ -7,7 +7,6 @@ Every entry exposes:
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
 from typing import Dict
 

@@ -4,8 +4,11 @@ from .estimators import (FittedEstimators, collect_benchmark,  # noqa
                          collect_memmax, fit_estimators)
 from .forest import (MODEL_ZOO, DecisionTree, LinearRegression,  # noqa
                      RandomForest, Ridge)
-from .placement import (PlacementPoint, PlacementResult,  # noqa
-                        find_optimal_placement)
+from .cluster_twin import ClusterDigitalTwin, ClusterDTResult  # noqa
+from .placement import (ClusterPlacementResult, PlacementPoint,  # noqa
+                        PlacementResult, ReplicaPlacement,
+                        find_cluster_placement, find_optimal_placement,
+                        split_pool_by_rate)
 from .pipeline import PlacementPipeline, build_pipeline  # noqa
 from .dataset import (FEATURE_NAMES, PAPER_RANKS, PAPER_RATES,  # noqa
                       TARGET_NAMES, Scenario, encode_features,

@@ -1,0 +1,82 @@
+"""Cluster Digital Twin: the paper's offline simulator, lifted to a fleet.
+
+Reuses the *same* ``ClusterRouter`` as the online ``ServingCluster`` and
+the same per-replica scheduling machinery as the single-engine
+``DigitalTwin`` — each replica is a ``ServingEngine`` driven by an
+``EstimatorExecutor`` whose step times come from the fitted Eq. (1)
+estimators.  That makes cluster-level placement searches (per-replica
+served-adapter counts and slot configurations) as cheap to label as the
+paper's single-GPU sweeps: single process, no accelerator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+from ..serving.cluster import ClusterMetrics, ClusterRouter, ReplicaSpec
+from ..serving.engine import ServingEngine
+from ..serving.metrics import ServingMetrics
+from ..serving.request import Request
+from .digital_twin import EstimatorExecutor
+from .estimators import FittedEstimators
+from .workload import WorkloadSpec, resample_requests
+
+
+@dataclasses.dataclass
+class ClusterDTResult:
+    metrics: ClusterMetrics            # per-replica view: metrics.per_replica
+    router_summary: Dict[str, object]
+    sim_wall_time: float
+    mode: str
+
+
+class ClusterDigitalTwin:
+    def __init__(self, est: FittedEstimators, mode: str = "mean",
+                 max_running: int = 256):
+        assert mode in ("full", "mean")
+        self.est = est
+        self.mode = mode
+        self.max_running = max_running
+
+    # ------------------------------------------------------------------ #
+    def specs_from_slots(self, slots: Sequence[int],
+                         mean_rank: float = 8.0) -> List[ReplicaSpec]:
+        """Build replica specs whose KV capacity comes from the fitted
+        Mem_max estimator — the DT analogue of probing each node."""
+        return [ReplicaSpec(
+            adapter_slots=g,
+            kv_capacity_tokens=self.est.kv_capacity(g, mean_rank),
+            max_running=self.max_running) for g in slots]
+
+    # ------------------------------------------------------------------ #
+    def simulate(self, spec: WorkloadSpec, router: ClusterRouter,
+                 requests: Optional[List[Request]] = None,
+                 horizon: Optional[float] = None) -> ClusterDTResult:
+        t0 = time.perf_counter()
+        ranks = {a.uid: a.rank for a in spec.adapters}
+        if self.mode == "mean" or requests is None:
+            requests = resample_requests(spec, spec.length_stats())
+        else:
+            # full mode gets the exact stream (deep copy to keep caller's)
+            requests = [dataclasses.replace(
+                r, generated=0, admitted_at=None, first_token_at=None,
+                finished_at=None, token_times=[], n_preemptions=0)
+                for r in requests]
+        router.reset()
+        parts = router.partition(requests)
+        per: List[ServingMetrics] = []
+        for rspec, part in zip(router.specs, parts):
+            # the estimator's G/N term sees the adapters this replica
+            # actually serves, not the whole joint pool
+            n_rep = max(len({r.adapter for r in part}), 1)
+            engine = ServingEngine(
+                rspec.engine_config(),
+                EstimatorExecutor(self.est, rspec.adapter_slots, n_rep,
+                                  ranks))
+            per.append(engine.run(part, horizon=horizon or spec.horizon))
+        return ClusterDTResult(
+            metrics=ClusterMetrics.aggregate(per),
+            router_summary=router.summary(),
+            sim_wall_time=time.perf_counter() - t0,
+            mode=self.mode)

@@ -17,7 +17,7 @@ import numpy as np
 from ..serving.request import Adapter
 from .estimators import FittedEstimators
 from .placement import PlacementResult, find_optimal_placement
-from .workload import DATASETS, WorkloadSpec, make_adapter_pool
+from .workload import WorkloadSpec, make_adapter_pool
 
 PAPER_RATES = (3.2, 1.6, 0.8, 0.4, 0.1, 0.05, 0.025,
                0.0125, 0.00625, 0.003125)

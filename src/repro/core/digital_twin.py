@@ -23,9 +23,9 @@ from typing import Dict, List, Optional
 from ..serving.engine import EngineConfig, ServingEngine
 from ..serving.executor import StepTiming
 from ..serving.metrics import ServingMetrics
-from ..serving.request import Adapter, Request
+from ..serving.request import Request
 from .estimators import FittedEstimators
-from .workload import WorkloadSpec, generate_requests, resample_requests
+from .workload import WorkloadSpec, resample_requests
 
 
 class EstimatorExecutor:

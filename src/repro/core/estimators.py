@@ -20,7 +20,7 @@ only ever sees these fits — never the executor's hidden profile.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Sequence
 
 import numpy as np
 

@@ -24,8 +24,7 @@ from .dataset import (FEATURE_NAMES, TARGET_NAMES, Scenario, encode_features,
                       label_scenarios, scenario_grid)
 from .estimators import (FittedEstimators, collect_benchmark, collect_memmax,
                          fit_estimators)
-from .forest import MODEL_ZOO, RandomForest
-from .workload import WorkloadSpec
+from .forest import MODEL_ZOO
 
 
 @dataclasses.dataclass

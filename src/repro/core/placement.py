@@ -11,9 +11,7 @@ scenarios for the ML model.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
-
-import numpy as np
+from typing import List, Optional, Sequence
 
 from ..serving.request import Adapter
 from .digital_twin import DigitalTwin
@@ -51,6 +49,70 @@ class PlacementResult:
 def default_slot_grid(n: int) -> List[int]:
     grid = sorted({max(1, n // 8), max(1, n // 4), max(1, n // 2), n})
     return grid
+
+
+def split_pool_by_rate(pool: Sequence[Adapter],
+                       n_replicas: int) -> List[List[Adapter]]:
+    """LPT greedy partition: heaviest-rate adapter to the lightest bin.
+
+    The cluster analogue of the paper's 'equal distribution' — balances
+    offered request rate across replicas before each replica's own
+    (concurrent, parallel) sweep."""
+    if n_replicas < 1:
+        raise ValueError("need at least one replica")
+    bins: List[List[Adapter]] = [[] for _ in range(n_replicas)]
+    loads = [0.0] * n_replicas
+    for a in sorted(pool, key=lambda x: -x.rate):
+        i = min(range(n_replicas), key=lambda j: (loads[j], j))
+        bins[i].append(a)
+        loads[i] += a.rate
+    return bins
+
+
+@dataclasses.dataclass
+class ReplicaPlacement:
+    replica: int
+    adapters: List[Adapter]
+    placement: PlacementResult
+
+
+@dataclasses.dataclass
+class ClusterPlacementResult:
+    """Per-replica (concurrent, parallel) predictions for a joint pool."""
+    replicas: List[ReplicaPlacement]
+
+    @property
+    def n_adapters(self) -> List[int]:
+        return [r.placement.n_adapters for r in self.replicas]
+
+    @property
+    def slots(self) -> List[int]:
+        return [r.placement.slots for r in self.replicas]
+
+    @property
+    def total_throughput(self) -> float:
+        return sum(r.placement.throughput for r in self.replicas)
+
+
+def find_cluster_placement(
+        est: FittedEstimators, pool: Sequence[Adapter], dataset: str,
+        n_replicas: int, horizon: float = 300.0, seed: int = 0,
+        n_grid: Optional[Sequence[int]] = None,
+        slot_grid=default_slot_grid, dt_mode: str = "mean",
+        early_stop: int = 2) -> ClusterPlacementResult:
+    """Predict each replica's (N*, G*) from the joint workload: rate-
+    balance the pool across replicas, then run the paper's single-node
+    DT sweep per replica partition."""
+    parts = split_pool_by_rate(pool, n_replicas)
+    replicas: List[ReplicaPlacement] = []
+    for i, part in enumerate(parts):
+        res = find_optimal_placement(
+            est, part, dataset, horizon=horizon, seed=seed + i,
+            n_grid=n_grid, slot_grid=slot_grid, dt_mode=dt_mode,
+            early_stop=early_stop)
+        replicas.append(ReplicaPlacement(replica=i, adapters=part,
+                                         placement=res))
+    return ClusterPlacementResult(replicas=replicas)
 
 
 def find_optimal_placement(

@@ -8,7 +8,7 @@ fixed-length sequences — enough structure for the training loss to fall.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Tuple
 
 import numpy as np
 

@@ -8,7 +8,6 @@ in interpreter mode, which is how the kernel unit tests validate on CPU.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

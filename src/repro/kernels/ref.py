@@ -45,7 +45,6 @@ def lora_ref_bucketed(x, a, b, idx, scale: float = 1.0,
     """
     t, d = x.shape
     n, _, r = a.shape
-    o = b.shape[-1]
     cap = min(t, int(overprovision * -(-t // n)) + 8)
     onehot = jax.nn.one_hot(idx, n, dtype=jnp.int32)
     pos = jnp.cumsum(onehot, axis=0) - onehot

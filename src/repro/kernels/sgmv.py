@@ -60,7 +60,6 @@ def sgmv(x, a, b, idx, scale: float = 1.0, interpret: bool = False):
     """
     t, d = x.shape
     n = a.shape[0]
-    o = b.shape[-1]
     # bucket tokens by adapter (dropless: capacity covers the worst case
     # sized by 2x mean + 128, clamped to T)
     cap = min(t, int(2 * -(-t // n)) + 128)

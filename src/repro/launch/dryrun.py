@@ -23,20 +23,17 @@ Usage:
   python -m repro.launch.dryrun --arch all --multi-pod --out dryrun.jsonl
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 
 from ..configs import ARCH_IDS, canonical, get_config
 from ..models.config import SHAPES, applicable_shapes
-from ..models.transformer import build_segments
 from .mesh import make_production_mesh
-from .roofline import (CellCost, RooflineTerms, cost_from_compiled,
-                       model_flops_for)
+from .roofline import RooflineTerms, cost_from_compiled, model_flops_for
 from .steps import StepBundle, build_step, cell_id
 
 

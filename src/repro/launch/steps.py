@@ -11,14 +11,12 @@ import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..configs import get_config
 from ..configs.shapes import (DRYRUN_ADAPTER_SLOTS, DRYRUN_LORA_RANK,
                               input_specs)
 from ..models import Model, make_plan
-from ..models.config import ModelConfig, SHAPES, ShapeConfig
+from ..models.config import ModelConfig, ShapeConfig
 from ..training import AdamWConfig, TrainConfig, adamw_init, make_train_step
 
 

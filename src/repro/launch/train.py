@@ -13,7 +13,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from ..configs import canonical, get_config, get_reduced
+from ..configs import get_config, get_reduced
 from ..data import DataConfig, TokenPipeline
 from ..models import Model, ShardingPlan
 from ..training import (AdamWConfig, TrainConfig, init_train_state,

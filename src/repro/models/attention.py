@@ -19,10 +19,6 @@ reference when the axis size is 1.
 """
 from __future__ import annotations
 
-import functools
-import math
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 
@@ -33,11 +29,11 @@ NEG_INF = -1.0e30
 # flash-style block update
 # --------------------------------------------------------------------------- #
 
-def _flash_block(q, k, v, mask, scale, m, l, acc):
+def _flash_block(q, k, v, mask, scale, m, lse, acc):
     """One online-softmax update.
 
     q: (B, C, KV, G, D)   k/v: (B, S, KV, D)   mask: (C, S) or (B, C, S)
-    m, l: (B, C, KV, G)   acc: (B, C, KV, G, D)  (all fp32)
+    m, lse: (B, C, KV, G)   acc: (B, C, KV, G, D)  (all fp32)
     """
     s = jnp.einsum("bckgd,bskd->bckgs", q, k,
                    preferred_element_type=jnp.float32) * scale
@@ -50,7 +46,7 @@ def _flash_block(q, k, v, mask, scale, m, l, acc):
     p = jnp.exp(s - m_new[..., None])
     p = jnp.where(mask_b, p, 0.0)
     corr = jnp.exp(m - m_new)
-    l_new = l * corr + jnp.sum(p, axis=-1)
+    l_new = lse * corr + jnp.sum(p, axis=-1)
     pv = jnp.einsum("bckgs,bskd->bckgd", p, v.astype(jnp.float32),
                     preferred_element_type=jnp.float32)
     acc_new = acc * corr[..., None] + pv
@@ -85,7 +81,7 @@ def _attend_chunked(q, k, v, q_pos, kv_pos, scale, window: int,
     """Chunked (over Q) causal attention of local q against a kv buffer.
 
     q: (B, Sq, H, D); k/v: (B, Skv, KV, D); q_pos: (Sq,); kv_pos: (Skv,)
-    Returns fp32 (m, l, acc) with shapes ((B,Sq,KV,G), ..., (B,Sq,KV,G,D)).
+    Returns fp32 (m, lse, acc) with shapes ((B,Sq,KV,G), ..., (B,Sq,KV,G,D)).
     """
     b, sq, h, d = q.shape
     kvh = k.shape[2]
@@ -120,13 +116,13 @@ def _attend_chunked(q, k, v, q_pos, kv_pos, scale, window: int,
 
     if unroll:
         outs = [one(None, (qc[i], pc[i]))[1] for i in range(nc)]
-        m, l, acc = (jnp.stack([o[j] for o in outs]) for j in range(3))
+        m, lse, acc = (jnp.stack([o[j] for o in outs]) for j in range(3))
     else:
-        _, (m, l, acc) = jax.lax.scan(one, None, (qc, pc))
+        _, (m, lse, acc) = jax.lax.scan(one, None, (qc, pc))
     m = m.swapaxes(0, 1).reshape(b, sq, kvh, g)
-    l = l.swapaxes(0, 1).reshape(b, sq, kvh, g)
+    lse = lse.swapaxes(0, 1).reshape(b, sq, kvh, g)
     acc = acc.swapaxes(0, 1).reshape(b, sq, kvh, g, d)
-    return m, l, acc
+    return m, lse, acc
 
 
 def _merge_state(state_a, state_b):
@@ -138,8 +134,8 @@ def _merge_state(state_a, state_b):
     return m, l_a * ca + l_b * cb, a_a * ca[..., None] + a_b * cb[..., None]
 
 
-def _finalize(m, l, acc, dtype):
-    out = acc / jnp.maximum(l, 1e-20)[..., None]
+def _finalize(m, lse, acc, dtype):
+    out = acc / jnp.maximum(lse, 1e-20)[..., None]
     return _merge_heads(out).astype(dtype)
 
 
@@ -154,9 +150,9 @@ def ring_attention(q, k, v, *, axis_name: str, n_shards: int, scale: float,
     skv = k.shape[1]
     if n_shards == 1:
         q_pos = jnp.arange(sq)
-        m, l, acc = _attend_chunked(q, k, v, q_pos, jnp.arange(skv), scale,
+        m, lse, acc = _attend_chunked(q, k, v, q_pos, jnp.arange(skv), scale,
                                     0, q_chunk, unroll)
-        return _finalize(m, l, acc, q.dtype)
+        return _finalize(m, lse, acc, q.dtype)
 
     my = jax.lax.axis_index(axis_name)
     q_pos = my * sq + jnp.arange(sq)
@@ -218,9 +214,9 @@ def local_attention(q, k, v, *, axis_name: str, n_shards: int, scale: float,
     v_ext = jnp.concatenate(parts_v, axis=1)
     start = (my - len(parts_k) + 1) * skv
     kv_pos = start + jnp.arange(k_ext.shape[1])  # negative => masked
-    m, l, acc = _attend_chunked(q, k_ext, v_ext, q_pos, kv_pos, scale,
+    m, lse, acc = _attend_chunked(q, k_ext, v_ext, q_pos, kv_pos, scale,
                                 window, q_chunk, unroll)
-    return _finalize(m, l, acc, q.dtype)
+    return _finalize(m, lse, acc, q.dtype)
 
 
 # --------------------------------------------------------------------------- #
@@ -236,9 +232,13 @@ def quantize_kv(x):
     (validated in tests/test_consistency_int8.py).
     """
     scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+    # quantize against the f16-rounded scale that dequantization will use,
+    # so the s/2 round-off bound holds for the stored representation
+    scale = scale.astype(jnp.float16)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32)
+                           / scale[..., None].astype(jnp.float32)),
                  -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.float16)
+    return q, scale
 
 
 def decode_update_cache(cache, new, pos, my, s_loc):
@@ -293,7 +293,7 @@ def decode_attention_sharded(q, k_cache, v_cache, new_k, new_v, pos, *,
     s = jnp.where(mask, s, NEG_INF)
     m = jnp.max(s, axis=-1)
     p = jnp.where(mask, jnp.exp(s - m[..., None]), 0.0)
-    l = jnp.sum(p, axis=-1)
+    lse = jnp.sum(p, axis=-1)
     if quant:
         pv = p * v_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None]
         acc = jnp.einsum("bkgs,bskd->bkgd", pv.astype(jnp.bfloat16),
@@ -305,9 +305,9 @@ def decode_attention_sharded(q, k_cache, v_cache, new_k, new_v, pos, *,
     if n_shards > 1:
         m_g = jax.lax.pmax(m, axis_name)
         corr = jnp.exp(m - m_g)
-        l = jax.lax.psum(l * corr, axis_name)
+        lse = jax.lax.psum(lse * corr, axis_name)
         acc = jax.lax.psum(acc * corr[..., None], axis_name)
-    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    out = acc / jnp.maximum(lse, 1e-20)[..., None]
     outs = (out.reshape(b, h, d).astype(q.dtype), k_cache, v_cache)
     if quant:
         outs += (k_scale, v_scale)
@@ -340,10 +340,10 @@ def decode_attention_rolling(q, k_cache, v_cache, new_k, new_v, pos, *,
     s = jnp.where(mask, s, NEG_INF)
     m = jnp.max(s, axis=-1)
     p = jnp.where(mask, jnp.exp(s - m[..., None]), 0.0)
-    l = jnp.sum(p, axis=-1)
+    lse = jnp.sum(p, axis=-1)
     acc = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32),
                      preferred_element_type=jnp.float32)
-    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    out = acc / jnp.maximum(lse, 1e-20)[..., None]
     return out.reshape(b, h, d).astype(q.dtype), k_cache, v_cache
 
 

@@ -9,7 +9,7 @@ rglru:local schedules are first-class.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 

@@ -234,8 +234,6 @@ def make_plan(cfg, mesh: Optional[Mesh], kind: str, *,
                             unroll=unroll, remat=remat, kv_quant=kv_quant)
     axes = dict(mesh.shape)
     has_pod = "pod" in axes
-    seq_ok = not cfg.is_attention_free and any(
-        k in ("global", "local") for k in cfg.layer_kinds)
     # ssm/hybrid keep full seq (recurrence) and use width-TP everywhere
     width_tp_family = cfg.family in ("ssm", "hybrid")
 

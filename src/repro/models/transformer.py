@@ -33,9 +33,17 @@ from .config import ModelConfig
 from .sharding import ShardingPlan
 
 try:  # jax >= 0.8
-    shard_map = jax.shard_map
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
 except AttributeError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(*args, check_vma=False, **kwargs):
+    """jax.shard_map across jax versions (check_vma was check_rep)."""
+    kwargs[_CHECK_KW] = check_vma
+    return _shard_map(*args, **kwargs)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -262,10 +270,10 @@ class Model:
             k = plan.constrain(k, spec)
             v = plan.constrain(v, spec)
             window = cfg.local_window if kind == "local" else 0
-            m, l, acc = attention._attend_chunked(
+            m, lse, acc = attention._attend_chunked(
                 q, k, v, jnp.arange(q.shape[1]), jnp.arange(k.shape[1]),
                 scale, window, 256, plan.unroll)
-            out = attention._finalize(m, l, acc, q.dtype)
+            out = attention._finalize(m, lse, acc, q.dtype)
             return plan.constrain(out, P(plan.dp(), plan.seq_axis,
                                          None, None))
         if kind == "local":
@@ -308,7 +316,6 @@ class Model:
 
     def _attend_decode(self, q, k, v, cache, kind, scale):
         plan, cfg = self.plan, self.cfg
-        b = q.shape[0]
         q1, k1, v1 = q[:, 0], k[:, 0], v[:, 0]
         pos = cache["pos"]
         if kind == "local":

@@ -7,3 +7,6 @@ from .metrics import ServingMetrics, smape, smape_vec, summarize  # noqa
 from .request import Adapter, Request  # noqa
 from .scheduler import Scheduler, StepPlan  # noqa
 from .router import PlacementRouter, ReplicaPlan, RouterState  # noqa
+from .cluster import (POLICIES, ClusterMetrics, ClusterRouter,  # noqa
+                      ReplicaSpec, RoutingPolicy, ServingCluster,
+                      make_replica_specs, register_policy)

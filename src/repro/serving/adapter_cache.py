@@ -7,7 +7,7 @@ number of served adapters it time-shares GPU slots via CPU<->GPU swaps
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Set
+from typing import Dict, Optional
 
 
 class AdapterSlotCache:

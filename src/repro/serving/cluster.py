@@ -1,0 +1,341 @@
+"""Multi-replica adapter-affinity serving cluster.
+
+Scales the single-engine system to a fleet: a ``ClusterRouter`` fronts N
+``ServingEngine`` replicas (heterogeneous ``adapter_slots`` /
+``kv_capacity_tokens`` per replica) and routes each request with a
+pluggable policy:
+
+  * ``affinity``     — prefer replicas that already hold the request's
+                       adapter (minimising cold CPU->GPU adapter loads,
+                       the Fig. 4 cost), falling back to least-loaded,
+                       and spilling away from overloaded replicas;
+  * ``least-loaded`` — pick the replica with the lowest capacity-
+                       normalised assigned work (heterogeneity-aware);
+  * ``round-robin``  — cycle replicas (the affinity-blind baseline).
+
+The router keeps a per-replica model of resident adapters (an LRU capped
+at the replica's slot count — mirroring ``AdapterSlotCache`` semantics)
+and of assigned work (prompt+output tokens, normalised by the replica's
+KV capacity so a half-size replica receives half the load).
+
+``ServingCluster`` runs the routed partitions through real engines;
+``repro.core.cluster_twin.ClusterDigitalTwin`` runs the *same router*
+over estimator-backed engines so cluster-level placement can be labelled
+offline exactly as the paper does for one GPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Type, Union
+
+from .engine import EngineConfig, ServingEngine
+from .metrics import ServingMetrics
+from .request import Request
+
+
+# --------------------------------------------------------------------------- #
+# replica description
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaSpec:
+    """Static description of one serving replica (one GPU/node)."""
+    adapter_slots: int
+    kv_capacity_tokens: int
+    max_running: int = 256
+    block_size: int = 16
+
+    def engine_config(self) -> EngineConfig:
+        return EngineConfig(
+            kv_capacity_tokens=self.kv_capacity_tokens,
+            adapter_slots=self.adapter_slots,
+            max_running=self.max_running,
+            block_size=self.block_size)
+
+
+def make_replica_specs(
+        n: int, adapter_slots: Union[int, Sequence[int]],
+        kv_capacity_tokens: Union[int, Sequence[int]],
+        max_running: int = 256) -> List[ReplicaSpec]:
+    """Uniform or heterogeneous specs from scalars / per-replica lists."""
+    def expand(v, name):
+        vs = [v] * n if isinstance(v, int) else list(v)
+        if len(vs) != n:
+            raise ValueError(f"{name}: expected {n} values, got {len(vs)}")
+        return vs
+    slots = expand(adapter_slots, "adapter_slots")
+    kvs = expand(kv_capacity_tokens, "kv_capacity_tokens")
+    return [ReplicaSpec(adapter_slots=s, kv_capacity_tokens=k,
+                        max_running=max_running)
+            for s, k in zip(slots, kvs)]
+
+
+# --------------------------------------------------------------------------- #
+# routing policies (pluggable)
+# --------------------------------------------------------------------------- #
+
+POLICIES: Dict[str, Type["RoutingPolicy"]] = {}
+
+
+def register_policy(cls: Type["RoutingPolicy"]) -> Type["RoutingPolicy"]:
+    POLICIES[cls.name] = cls
+    return cls
+
+
+class RoutingPolicy:
+    """Chooses a replica index for each incoming request."""
+    name = ""
+
+    def __init__(self, router: "ClusterRouter"):
+        self.router = router
+
+    def reset(self) -> None:
+        pass
+
+    def choose(self, req: Request) -> int:
+        raise NotImplementedError
+
+
+@register_policy
+class RoundRobinPolicy(RoutingPolicy):
+    name = "round-robin"
+
+    def __init__(self, router: "ClusterRouter"):
+        super().__init__(router)
+        self._next = 0
+
+    def reset(self) -> None:
+        self._next = 0
+
+    def choose(self, req: Request) -> int:
+        rep = self._next % self.router.n_replicas
+        self._next += 1
+        return rep
+
+
+@register_policy
+class LeastLoadedPolicy(RoutingPolicy):
+    name = "least-loaded"
+
+    def choose(self, req: Request) -> int:
+        return self.router.least_loaded()
+
+
+@register_policy
+class AffinityPolicy(RoutingPolicy):
+    """Adapter affinity with overload spill.
+
+    Route to the least-loaded replica already holding the adapter unless
+    its normalised load exceeds ``overload_factor`` x the fleet minimum
+    plus ``slack`` (absolute headroom, in fractions of KV capacity) — in
+    which case fall back to the least-loaded replica.
+    """
+    name = "affinity"
+
+    def __init__(self, router: "ClusterRouter",
+                 overload_factor: float = 1.5, slack: float = 0.1):
+        super().__init__(router)
+        self.overload_factor = overload_factor
+        self.slack = slack
+
+    def choose(self, req: Request) -> int:
+        r = self.router
+        holders = [i for i in range(r.n_replicas)
+                   if req.adapter in r.resident[i]]
+        if holders:
+            rep = min(holders, key=lambda i: (r.load(i), i))
+            floor = r.load(r.least_loaded())
+            if r.load(rep) <= self.overload_factor * floor + self.slack:
+                return rep
+        return r.least_loaded()
+
+
+# --------------------------------------------------------------------------- #
+# router
+# --------------------------------------------------------------------------- #
+
+class ClusterRouter:
+    """Routes requests across replicas; tracks residency + assigned load.
+
+    The residency model is an LRU over adapter uids capped at each
+    replica's ``adapter_slots`` — the router's belief of what the
+    replica's ``AdapterSlotCache`` holds.  Assigned load is cumulative
+    prompt+output tokens normalised by KV capacity, so heterogeneous
+    replicas are compared on relative utilisation.
+    """
+
+    def __init__(self, specs: Sequence[ReplicaSpec],
+                 policy: Union[str, RoutingPolicy] = "affinity",
+                 **policy_kwargs):
+        self.specs = list(specs)
+        if not self.specs:
+            raise ValueError("need at least one replica spec")
+        if isinstance(policy, str):
+            if policy not in POLICIES:
+                raise ValueError(
+                    f"unknown policy {policy!r}; have {sorted(POLICIES)}")
+            self.policy: RoutingPolicy = POLICIES[policy](
+                self, **policy_kwargs)
+        else:
+            self.policy = policy
+        self.reset()
+
+    # ------------------------------------------------------------------ #
+    def reset(self) -> None:
+        n = self.n_replicas
+        # adapter uid -> last-touch sequence number, per replica
+        self.resident: List[Dict[int, int]] = [{} for _ in range(n)]
+        self.assigned_tokens = [0.0] * n
+        self.assigned_requests = [0] * n
+        self.assignments: Dict[int, int] = {}     # request uid -> replica
+        self.n_cold_routes = 0    # routed to a replica not holding adapter
+        self._seq = 0
+        self.policy.reset()
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.specs)
+
+    def load(self, rep: int) -> float:
+        """Capacity-normalised cumulative assigned work."""
+        return self.assigned_tokens[rep] / max(
+            self.specs[rep].kv_capacity_tokens, 1)
+
+    def least_loaded(self) -> int:
+        return min(range(self.n_replicas), key=lambda i: (self.load(i), i))
+
+    # ------------------------------------------------------------------ #
+    def route(self, req: Request) -> int:
+        rep = self.policy.choose(req)
+        if not 0 <= rep < self.n_replicas:
+            raise ValueError(f"policy chose invalid replica {rep}")
+        self._commit(rep, req)
+        return rep
+
+    def _commit(self, rep: int, req: Request) -> None:
+        self._seq += 1
+        res = self.resident[rep]
+        if req.adapter not in res:
+            self.n_cold_routes += 1
+            slots = self.specs[rep].adapter_slots
+            if slots > 0 and len(res) >= slots:
+                lru = min(res, key=res.get)
+                del res[lru]
+        res[req.adapter] = self._seq
+        self.assigned_tokens[rep] += req.prompt_len + req.output_len
+        self.assigned_requests[rep] += 1
+        self.assignments[req.uid] = rep
+
+    def partition(self, requests: Sequence[Request]) -> List[List[Request]]:
+        """Route a full stream (in arrival order) into per-replica lists."""
+        parts: List[List[Request]] = [[] for _ in range(self.n_replicas)]
+        for req in sorted(requests, key=lambda r: r.arrival):
+            parts[self.route(req)].append(req)
+        return parts
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "policy": self.policy.name,
+            "assigned_requests": list(self.assigned_requests),
+            "assigned_tokens": list(self.assigned_tokens),
+            "loads": [self.load(i) for i in range(self.n_replicas)],
+            "n_cold_routes": self.n_cold_routes,
+        }
+
+
+# --------------------------------------------------------------------------- #
+# cluster-level metrics
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class ClusterMetrics:
+    """Cluster aggregate + per-replica breakdown.
+
+    Replicas run on independent clocks; the cluster duration is the
+    longest replica run, throughput/ideal are total tokens over that
+    duration, and latency means are weighted by finished requests.
+    """
+    per_replica: List[ServingMetrics]
+    throughput: float
+    itl: float
+    ttft: float
+    ideal_throughput: float
+    duration: float
+    n_finished: int
+    n_preemptions: int
+    max_kv_used: float
+    n_loads: int
+
+    @property
+    def starved(self) -> bool:
+        if self.ideal_throughput <= 0:
+            return False
+        return self.throughput < 0.9 * self.ideal_throughput
+
+    @property
+    def imbalance(self) -> float:
+        """Max/mean offered-token share across replicas (1.0 = even)."""
+        tokens = [m.ideal_throughput * m.duration for m in self.per_replica]
+        mean = sum(tokens) / len(tokens) if tokens else 0.0
+        return max(tokens) / mean if mean > 0 else 0.0
+
+    @classmethod
+    def aggregate(cls, per: Sequence[ServingMetrics]) -> "ClusterMetrics":
+        per = list(per)
+        duration = max((m.duration for m in per), default=0.0)
+        out_tokens = sum(m.throughput * m.duration for m in per)
+        offered = sum(m.ideal_throughput * m.duration for m in per)
+        weights = [m.n_finished for m in per]
+        wsum = sum(weights)
+
+        def wmean(vals):
+            if wsum <= 0:
+                return 0.0
+            return sum(v * w for v, w in zip(vals, weights)) / wsum
+
+        return cls(
+            per_replica=per,
+            throughput=out_tokens / duration if duration > 0 else 0.0,
+            itl=wmean([m.itl for m in per]),
+            ttft=wmean([m.ttft for m in per]),
+            ideal_throughput=offered / duration if duration > 0 else 0.0,
+            duration=duration,
+            n_finished=sum(m.n_finished for m in per),
+            n_preemptions=sum(m.n_preemptions for m in per),
+            max_kv_used=max((m.max_kv_used for m in per), default=0.0),
+            n_loads=sum(m.n_loads for m in per),
+        )
+
+
+# --------------------------------------------------------------------------- #
+# the cluster itself
+# --------------------------------------------------------------------------- #
+
+class ServingCluster:
+    """N ``ServingEngine`` replicas behind a ``ClusterRouter``.
+
+    Each replica is an independent machine with its own executor and
+    virtual clock; the router decides the partition of the request
+    stream, the engines serve their partitions, and the per-replica
+    metrics are aggregated into ``ClusterMetrics``.
+    """
+
+    def __init__(self, router: ClusterRouter, executors: Sequence):
+        if len(executors) != router.n_replicas:
+            raise ValueError(
+                f"{router.n_replicas} replicas but {len(executors)} "
+                "executors")
+        self.router = router
+        self.engines = [ServingEngine(spec.engine_config(), ex)
+                        for spec, ex in zip(router.specs, executors)]
+
+    def run(self, requests: Sequence[Request],
+            horizon: Optional[float] = None) -> ClusterMetrics:
+        # fresh routing state per run: a router scored offline (e.g. by the
+        # ClusterDigitalTwin) carries cumulative loads/residency from that
+        # stream, which must not skew this one
+        self.router.reset()
+        parts = self.router.partition(requests)
+        per = [eng.run(part, horizon=horizon)
+               for eng, part in zip(self.engines, parts)]
+        return ClusterMetrics.aggregate(per)

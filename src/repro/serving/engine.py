@@ -17,7 +17,7 @@ from .adapter_cache import AdapterSlotCache
 from .executor import StepTiming
 from .kv_cache import PagedKVCache
 from .metrics import ServingMetrics, summarize
-from .request import Adapter, Request
+from .request import Request
 from .scheduler import Scheduler
 
 

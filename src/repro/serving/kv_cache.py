@@ -9,7 +9,7 @@ behaviour the paper analyses (Fig. 5's output-length effect).
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict
 
 
 class PagedKVCache:

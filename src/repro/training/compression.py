@@ -11,7 +11,6 @@ reduce in native bf16 through XLA's fused reduce-scatter.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

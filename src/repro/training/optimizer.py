@@ -8,7 +8,7 @@ back to the parameter dtype (bf16 master-less recipe; flip
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +27,8 @@ class AdamWConfig:
 
 
 def adamw_init(params, cfg: AdamWConfig) -> Dict[str, Any]:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     state = {
         "step": jnp.zeros((), jnp.int32),
         "m": jax.tree.map(zeros, params),

@@ -7,8 +7,7 @@ explicit in/out shardings — the same function the multi-pod dry-run lowers.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

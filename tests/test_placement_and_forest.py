@@ -1,7 +1,9 @@
 """Placement search properties (paper Fig. 5) + interpretable models."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (DecisionTree, LinearRegression, RandomForest,
                         collect_benchmark, collect_memmax, fit_estimators,

@@ -1,11 +1,9 @@
 """Serving engine semantics: scheduler, adapter slots, KV, preemption,
 metrics, starvation."""
-import pytest
 
 from repro.serving import (AdapterSlotCache, EngineConfig, PagedKVCache,
-                           Request, Scheduler, ServingEngine, StepTiming,
+                           Request, Scheduler, ServingEngine,
                            SyntheticExecutor, HardwareProfile, smape)
-from repro.serving.scheduler import StepPlan
 from repro.core import WorkloadSpec, generate_requests, make_adapter_pool
 
 

@@ -1,13 +1,11 @@
 """S-LoRA serving mode (paper §V-B): dynamic slots with unified
 adapter/KV memory and idle-adapter eviction."""
-import pytest
 
 from repro.core import (DigitalTwin, WorkloadSpec, collect_benchmark,
                         collect_memmax, fit_estimators, generate_requests,
                         make_adapter_pool)
 from repro.serving import (AdapterSlotCache, EngineConfig, PagedKVCache,
-                           Request, ServingEngine, SyntheticExecutor,
-                           HardwareProfile)
+                           ServingEngine, SyntheticExecutor, HardwareProfile)
 
 
 def test_dynamic_cache_charges_unified_pool():

@@ -1,6 +1,5 @@
 """Per-architecture smoke tests: reduced config of the same family, one
 train step + prefill + decode on CPU; output shapes + finiteness."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +7,6 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.models import Model, ShardingPlan, applicable_shapes
-from repro.models.config import SHAPES
 from repro.models.layers import pad_vocab
 from repro.models.transformer import pad_cache
 from repro.training import (AdamWConfig, TrainConfig, init_train_state,

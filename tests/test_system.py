@@ -1,9 +1,7 @@
 """End-to-end behaviour: the full paper pipeline on a small scale —
 benchmark -> fit -> DT -> dataset -> model -> recommend -> route."""
-import numpy as np
 
 from repro.core import build_pipeline, make_adapter_pool
-from repro.core.workload import WorkloadSpec
 from repro.serving import PlacementRouter
 
 

@@ -1,13 +1,14 @@
 """Training substrate: optimizer, data pipeline, checkpointing,
 fault-tolerant loop, gradient compression."""
-import os
 import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_reduced

@@ -1,12 +1,14 @@
 """Workload generation properties + multi-replica router behaviour."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (WorkloadSpec, generate_requests, make_adapter_pool,
                         resample_requests)
 from repro.serving import PlacementRouter
-from repro.serving.request import Adapter
 
 
 @settings(max_examples=10, deadline=None)
