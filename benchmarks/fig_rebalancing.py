@@ -1,0 +1,143 @@
+"""Online rebalancing under drifting adapter popularity.
+
+The rebalancing figure (ours; no paper counterpart — this is the cluster
+extension of Fig. 5's placement sensitivity): a workload whose hot
+adapter set rotates between phases is served by the same affinity router
+under three regimes —
+
+  * ``static``     — affinity routing only; residency earned in one
+                     phase is wrong for the next,
+  * ``rebalance``  — the EWMA ``RebalancePolicy`` migrates resident
+                     adapters as load drifts (Fig. 4 cost charged),
+  * ``oracle``     — per-phase LPT assignment computed from the *true*
+                     phase rates (perfect future knowledge upper bound).
+
+A second run kills one replica mid-stream with rebalancing on and
+verifies every request still completes on the survivors (the
+fault-tolerance acceptance).
+"""
+from __future__ import annotations
+
+import bisect
+from typing import Dict, Sequence
+
+from .common import CsvOut, fitted_estimators, is_smoke
+from repro.core import (ClusterDigitalTwin, WorkloadSpec,
+                        generate_drifting_requests, make_adapter_pool,
+                        rotating_hot_phases, split_pool_by_rate)
+from repro.core.cluster_twin import ClusterDTResult
+from repro.serving import ClusterRouter, FailureEvent
+from repro.serving.cluster import RoutingPolicy, register_policy
+from repro.serving.request import Adapter
+
+
+@register_policy
+class OracleDriftPolicy(RoutingPolicy):
+    """Per-phase LPT assignment from the *true* phase rates — the
+    clairvoyant upper bound a reactive rebalancer chases."""
+    name = "oracle-drift"
+
+    def __init__(self, router: ClusterRouter,
+                 assignment: Dict[int, Dict[int, int]] = None,
+                 phase_starts: Sequence[float] = ()):
+        super().__init__(router)
+        self.assignment = assignment or {}
+        self.phase_starts = list(phase_starts)
+
+    def choose(self, req) -> int:
+        k = bisect.bisect_right(self.phase_starts, req.arrival) - 1
+        rep = self.assignment.get(max(k, 0), {}).get(req.adapter)
+        if rep is None or not self.router.alive[rep]:
+            return self.router.least_loaded()
+        return rep
+
+
+def oracle_assignment(pool: Sequence[Adapter], phases,
+                      n_replicas: int) -> Dict[int, Dict[int, int]]:
+    """LPT-balance each phase's true rates across replicas."""
+    out: Dict[int, Dict[int, int]] = {}
+    for k, ph in enumerate(phases):
+        phase_pool = [Adapter(uid=a.uid, rank=a.rank,
+                              rate=ph.rates.get(a.uid, a.rate))
+                      for a in pool]
+        bins = split_pool_by_rate(phase_pool, n_replicas)
+        out[k] = {a.uid: i for i, part in enumerate(bins) for a in part}
+    return out
+
+
+# --------------------------------------------------------------------------- #
+
+def drift_config(smoke: bool) -> dict:
+    if smoke:
+        return dict(n_replicas=2, n_adapters=16, slots=4, horizon=60.0,
+                    n_phases=2, hot_fraction=0.375, hot_rate=1.2,
+                    cold_rate=0.02, epoch=5.0, seed=3)
+    return dict(n_replicas=2, n_adapters=16, slots=4, horizon=90.0,
+                n_phases=3, hot_fraction=0.375, hot_rate=1.2,
+                cold_rate=0.02, epoch=5.0, seed=3)
+
+
+def run_mode(est, mode: str, cfg: dict,
+             failures: Sequence[FailureEvent] = ()) -> ClusterDTResult:
+    """One drifting-popularity run of the ClusterDigitalTwin online loop
+    under ``mode`` in {static, rebalance, oracle}."""
+    pool = make_adapter_pool(cfg["n_adapters"], [8, 16], [cfg["cold_rate"]])
+    mean_rank = sum(a.rank for a in pool) / len(pool)
+    phases = rotating_hot_phases(pool, cfg["horizon"],
+                                 n_phases=cfg["n_phases"],
+                                 hot_fraction=cfg["hot_fraction"],
+                                 hot_rate=cfg["hot_rate"],
+                                 cold_rate=cfg["cold_rate"])
+    reqs = generate_drifting_requests(pool, "medium", cfg["horizon"],
+                                      phases, seed=cfg["seed"])
+    twin = ClusterDigitalTwin(est, mode="full")
+    specs = twin.specs_from_slots([cfg["slots"]] * cfg["n_replicas"],
+                                  mean_rank=mean_rank)
+    if mode == "oracle":
+        router = ClusterRouter(
+            specs, policy="oracle-drift",
+            assignment=oracle_assignment(pool, phases, cfg["n_replicas"]),
+            phase_starts=[p.start for p in phases])
+    else:
+        router = ClusterRouter(specs, policy="affinity")
+    spec = WorkloadSpec(adapters=pool, dataset="medium",
+                        horizon=cfg["horizon"], seed=cfg["seed"])
+    return twin.simulate_online(
+        spec, router, requests=reqs, epoch=cfg["epoch"],
+        rebalance=(mode == "rebalance"), failures=failures)
+
+
+def main(out: CsvOut) -> None:
+    est = fitted_estimators()
+    cfg = drift_config(is_smoke())
+    results: Dict[str, ClusterDTResult] = {}
+    for mode in ("static", "rebalance", "oracle"):
+        res = run_mode(est, mode, cfg)
+        results[mode] = res
+        m = res.metrics
+        out.row(mode, 1.0,
+                f"thpt={m.throughput:.0f};ideal={m.ideal_throughput:.0f};"
+                f"loads={m.n_loads};finished={m.n_finished};"
+                f"migrations={len(res.online.migrations)};"
+                f"imbalance={m.imbalance:.2f}")
+    if results["rebalance"].metrics.throughput < \
+            results["static"].metrics.throughput:
+        raise RuntimeError(
+            "rebalancing lost to static affinity routing: "
+            f"{results['rebalance'].metrics.throughput:.1f} < "
+            f"{results['static'].metrics.throughput:.1f} tok/s")
+
+    # kill one replica at 40% of the horizon, rebalancing on
+    kill = FailureEvent(replica=0, at=0.4 * cfg["horizon"])
+    res = run_mode(est, "rebalance", cfg, failures=[kill])
+    m = res.metrics
+    # route() is called again for each drained request, so unique request
+    # count = total routed commits - re-routes
+    n_unique = sum(res.online.router_summary["assigned_requests"]) \
+        - res.online.n_rerouted
+    out.row("rebalance_kill", 1.0,
+            f"thpt={m.throughput:.0f};finished={m.n_finished};"
+            f"requests={n_unique};rerouted={res.online.n_rerouted};"
+            f"detected_at={res.online.failures_detected.get(0, -1):.0f}")
+    if m.n_finished < n_unique:
+        raise RuntimeError("requests starved after replica failure")

@@ -29,6 +29,7 @@ BENCHES = (
     "fig7_slots_and_dynamic",
     "fig9_scale_384",
     "fig_cluster_scaling",
+    "fig_rebalancing",
     "table1_dt_accuracy",
     "table1_placement_model",
     "kernels_bench",
@@ -40,6 +41,7 @@ SMOKE_BENCHES = (
     "fig2_loaded_adapters",
     "fig4_loading",
     "fig_cluster_scaling",
+    "fig_rebalancing",
 )
 
 
@@ -64,10 +66,14 @@ def main() -> None:
             failures += 1
             print(f"{name}/IMPORT_ERROR,0,{type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
+            if args.smoke:
+                raise SystemExit(1)      # CI gate: fail loudly, immediately
             continue
         if not callable(getattr(mod, "main", None)):
             failures += 1
             print(f"{name}/NO_MAIN,0,missing main(out)")
+            if args.smoke:
+                raise SystemExit(1)
             continue
         if args.smoke and name not in SMOKE_BENCHES:
             print(f"{name}/IMPORT_OK,0,smoke-skipped")
@@ -80,6 +86,8 @@ def main() -> None:
             failures += 1
             print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
+            if args.smoke:
+                raise SystemExit(1)      # CI gate: fail loudly, immediately
     if failures:
         raise SystemExit(1)
 

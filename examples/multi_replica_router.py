@@ -16,8 +16,10 @@ sys.path.insert(0, "src")
 from repro.core import (ClusterDigitalTwin, WorkloadSpec,  # noqa: E402
                         collect_benchmark, collect_memmax,
                         find_cluster_placement, fit_estimators,
-                        generate_requests, make_adapter_pool)
-from repro.serving import (ClusterRouter, HardwareProfile,  # noqa: E402
+                        generate_drifting_requests, generate_requests,
+                        make_adapter_pool, rotating_hot_phases)
+from repro.serving import (ClusterRouter, FailureEvent,  # noqa: E402
+                           HardwareProfile, RebalancePolicy,
                            ServingCluster, SyntheticExecutor, smape)
 from repro.serving.cluster import POLICIES  # noqa: E402
 
@@ -79,6 +81,30 @@ def main():
           f"(DT predicted {best_m.throughput:.0f}, smape="
           f"{smape(real.throughput, best_m.throughput):.1f}%) "
           f"adapter_loads={real.n_loads} starved={real.starved}")
+
+    print("\n4. living fleet: drifting popularity + a replica failure,")
+    print("   online rebalancing on (epoch loop, heartbeats, failover):")
+    phases = rotating_hot_phases(pool, HORIZON, n_phases=3, hot_rate=0.8,
+                                 cold_rate=0.02)
+    drift_reqs = generate_drifting_requests(pool, "medium", HORIZON,
+                                            phases, seed=5)
+    router = ClusterRouter(specs, policy="affinity")
+    executors = [SyntheticExecutor(profile, ranks, slots=s.adapter_slots,
+                                   n_adapters=N_ADAPTERS, seed=20 + i)
+                 for i, s in enumerate(specs)]
+    cluster = ServingCluster(router, executors)
+    load_cost = profile.load_cpu_base + profile.load_cpu_per_rank * 16
+    report = cluster.run_online(
+        drift_reqs, horizon=HORIZON, epoch=5.0,
+        rebalancer=RebalancePolicy(router,
+                                   load_cost_fn=lambda uid: load_cost),
+        failures=[FailureEvent(replica=1, at=HORIZON * 0.4)])
+    m = report.metrics
+    print(f"   thpt={m.throughput:.0f} tok/s finished={m.n_finished} "
+          f"migrations={len(report.migrations)} "
+          f"rerouted={report.n_rerouted} "
+          f"failure_detected_at={report.failures_detected.get(1, -1):.0f}s "
+          f"survivors_alive={report.router_summary['alive']}")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,19 @@
 """repro: multi-tenant LLM-adapter serving framework in JAX.
 
 Implements "A Data-driven ML Approach for Maximizing Performance in
-LLM-Adapter Serving" (Agullo et al., 2025): a Digital Twin of an online
-LLM-adapter serving system plus an ML placement pipeline, on top of a
-production-grade JAX serving/training substrate with Pallas TPU kernels.
+LLM-Adapter Serving" (Agullo et al., 2025) and grows it to a fleet.
+Three layers (see docs/architecture.md):
+
+  * engine       — ``repro.serving``: continuous-batching multi-LoRA
+                   engine (scheduler, paged KV, adapter slots) plus the
+                   cluster: ``ClusterRouter`` routing policies, the
+                   epoch-driven online loop with heartbeats/failover,
+                   and the EWMA adapter rebalancer;
+  * digital twin — ``repro.core``: Eq. (1) estimators fitted from
+                   engine benchmarks, single-node and cluster twins,
+                   placement search, interpretable placement models;
+  * substrate    — ``repro.models`` / ``repro.kernels`` /
+                   ``repro.training``: reduced JAX model zoo, Pallas
+                   kernels, training + fault-tolerant checkpointing.
 """
 __version__ = "1.0.0"

@@ -5,13 +5,18 @@ from .estimators import (FittedEstimators, collect_benchmark,  # noqa
 from .forest import (MODEL_ZOO, DecisionTree, LinearRegression,  # noqa
                      RandomForest, Ridge)
 from .cluster_twin import ClusterDigitalTwin, ClusterDTResult  # noqa
-from .placement import (ClusterPlacementResult, PlacementPoint,  # noqa
-                        PlacementResult, ReplicaPlacement,
-                        find_cluster_placement, find_optimal_placement,
-                        split_pool_by_rate)
+from .placement import (CLUSTER_FEATURE_NAMES, CLUSTER_TARGET_NAMES,  # noqa
+                        ClusterPlacementModel, ClusterPlacementResult,
+                        PlacementPoint, PlacementResult, ReplicaPlacement,
+                        encode_cluster_features, find_cluster_placement,
+                        find_cluster_placement_joint,
+                        find_optimal_placement, label_cluster_scenarios,
+                        split_pool_by_rate, train_cluster_placement_model)
 from .pipeline import PlacementPipeline, build_pipeline  # noqa
 from .dataset import (FEATURE_NAMES, PAPER_RANKS, PAPER_RATES,  # noqa
                       TARGET_NAMES, Scenario, encode_features,
                       label_scenarios, scenario_grid)
-from .workload import (DATASETS, WorkloadSpec, generate_requests,  # noqa
-                       make_adapter_pool, resample_requests)
+from .workload import (DATASETS, DriftPhase, WorkloadSpec,  # noqa
+                       generate_drifting_requests, generate_requests,
+                       make_adapter_pool, resample_requests,
+                       rotating_hot_phases)

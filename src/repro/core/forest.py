@@ -107,6 +107,7 @@ class DecisionTree:
         base_sse = ((y - y.mean(axis=0)) ** 2).sum()
         if base_sse - sse < 1e-12:
             return node_id
+        self._importance[j] += base_sse - sse
         node = self.nodes[node_id]
         node.feature, node.threshold = j, thr
         node.left = self._build(x[mask], y[mask], depth + 1)
@@ -119,8 +120,17 @@ class DecisionTree:
         if y.ndim == 1:
             y = y[:, None]
         self.nodes = []
+        self._importance = np.zeros(x.shape[1])
         self._build(x, y, 0)
         return self
+
+    def feature_importances(self) -> np.ndarray:
+        """Impurity-decrease importances, normalised to sum to 1 (the
+        paper's interpretability, quantified)."""
+        tot = self._importance.sum()
+        if tot <= 0:
+            return np.zeros_like(self._importance)
+        return self._importance / tot
 
     def predict(self, x) -> np.ndarray:
         x = np.asarray(x, float)
@@ -190,6 +200,16 @@ class RandomForest:
     def predict(self, x) -> np.ndarray:
         preds = [t.predict(x) for t in self.trees]
         return np.mean(preds, axis=0)
+
+    def feature_importances(self) -> np.ndarray:
+        """Mean of the trees' normalised impurity-decrease importances,
+        renormalised (stump trees contribute zeros)."""
+        if not self.trees:
+            raise RuntimeError("fit before feature_importances")
+        imp = np.mean([t.feature_importances() for t in self.trees],
+                      axis=0)
+        tot = imp.sum()
+        return imp / tot if tot > 0 else imp
 
 
 MODEL_ZOO = {

@@ -1,4 +1,4 @@
-"""Optimal-placement search (paper §IV / §VII-B).
+"""Optimal-placement search (paper §IV / §VII-B), single-node and cluster.
 
 Given a workload condition (a pool of adapters with rates/ranks and request
 length characteristics), find the placement that maximizes throughput
@@ -7,15 +7,32 @@ count G* at which throughput peaks while staying >= 90% of the offered
 (ideal) rate.  The search sweeps the Digital Twin — the whole point of the
 paper is that this sweep is cheap enough to label tens of thousands of
 scenarios for the ML model.
+
+Cluster level, two flavours:
+
+* ``find_cluster_placement`` — per-replica *reuse* of the paper's
+  single-node sweep: rate-balance the pool, sweep each partition alone.
+* ``find_cluster_placement_joint`` — sweep the ``ClusterDigitalTwin``
+  on the *joint* workload (the same router the online fleet uses routes
+  every candidate configuration), yielding per-replica (N*, G*) labels
+  that account for cross-replica routing effects.  These labels feed
+  ``train_cluster_placement_model`` — the cluster-level analogue of the
+  paper's RF, one ``recommend()`` call per fleet-sizing decision.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
+from ..serving.cluster import ClusterRouter
+from ..serving.metrics import smape_vec
 from ..serving.request import Adapter
+from .cluster_twin import ClusterDigitalTwin
 from .digital_twin import DigitalTwin
 from .estimators import FittedEstimators
+from .forest import RandomForest
 from .workload import WorkloadSpec
 
 
@@ -113,6 +130,166 @@ def find_cluster_placement(
         replicas.append(ReplicaPlacement(replica=i, adapters=part,
                                          placement=res))
     return ClusterPlacementResult(replicas=replicas)
+
+
+# --------------------------------------------------------------------------- #
+# joint cluster sweep + the cluster-level placement model
+# --------------------------------------------------------------------------- #
+
+CLUSTER_FEATURE_NAMES = (
+    "rate_max", "rate_min", "rate_mean", "rate_std",
+    "rank_max", "rank_min", "rank_mean", "rank_std",
+    "in_mean", "in_std", "out_mean", "out_std",
+    "n_replicas", "pool_size", "total_rate",
+)
+CLUSTER_TARGET_NAMES = ("total_throughput", "served_adapters",
+                        "slots_per_replica")
+
+
+def encode_cluster_features(rates: Sequence[float], ranks: Sequence[int],
+                            stats: Dict[str, float],
+                            n_replicas: int) -> np.ndarray:
+    r = np.asarray(rates, float)
+    k = np.asarray(ranks, float)
+    return np.array([
+        r.max(), r.min(), r.mean(), r.std(),
+        k.max(), k.min(), k.mean(), k.std(),
+        stats["in_mean"], stats["in_std"],
+        stats["out_mean"], stats["out_std"],
+        float(n_replicas), float(len(r)), float(r.sum()),
+    ])
+
+
+def find_cluster_placement_joint(
+        est: FittedEstimators, pool: Sequence[Adapter], dataset: str,
+        n_replicas: int, horizon: float = 150.0, seed: int = 0,
+        n_grid: Optional[Sequence[int]] = None,
+        slot_grid=default_slot_grid, policy: str = "affinity",
+        early_stop: int = 2) -> PlacementResult:
+    """Sweep (served adapters N, per-replica slots G) through the
+    ``ClusterDigitalTwin`` on the *joint* workload — candidate configs
+    are scored with the same router the online fleet uses, so the labels
+    include routing/affinity effects the per-replica reuse misses."""
+    twin = ClusterDigitalTwin(est, mode="mean")
+    if n_grid is None:
+        n_grid = sorted({max(1, len(pool) // k) for k in
+                         (8, 4, 2)} | {len(pool)})
+    curve: List[PlacementPoint] = []
+    best: Optional[PlacementPoint] = None
+    drops = 0
+    for n in sorted(n_grid):
+        served = list(pool[:n])
+        mean_rank = sum(a.rank for a in served) / len(served)
+        spec = WorkloadSpec(adapters=served, dataset=dataset,
+                            horizon=horizon, seed=seed)
+        best_at_n: Optional[PlacementPoint] = None
+        for g in slot_grid(max(n // n_replicas, 1)):
+            router = ClusterRouter(
+                twin.specs_from_slots([g] * n_replicas,
+                                      mean_rank=mean_rank),
+                policy=policy)
+            m = twin.simulate(spec, router).metrics
+            pt = PlacementPoint(
+                n_adapters=n, slots=g, throughput=m.throughput,
+                ideal=m.ideal_throughput, starved=m.starved)
+            curve.append(pt)
+            if not pt.starved and (best_at_n is None
+                                   or pt.throughput > best_at_n.throughput):
+                best_at_n = pt
+        if best_at_n is None:
+            drops += 1
+            if best is not None and drops >= early_stop:
+                break
+            continue
+        if best is None or best_at_n.throughput >= best.throughput:
+            best = best_at_n
+            drops = 0
+        else:
+            drops += 1
+            if drops >= early_stop:
+                break
+    return PlacementResult(best=best, curve=curve)
+
+
+def label_cluster_scenarios(
+        est: FittedEstimators, scenarios: Sequence, max_adapters: int,
+        replica_counts: Sequence[int] = (1, 2, 4),
+        horizon: float = 100.0, seed: int = 0, verbose: bool = False
+        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Label (scenario x fleet size) grid points with the joint sweep.
+
+    ``scenarios`` are ``repro.core.dataset.Scenario`` objects; each row's
+    features append (n_replicas, pool size, total rate) to the paper's
+    workload encoding, and its targets are the joint-sweep optimum
+    (cluster throughput, served adapters N*, per-replica slots G*)."""
+    xs, ys = [], []
+    i = 0
+    for sc in scenarios:
+        pool = sc.pool(max_adapters)
+        spec = WorkloadSpec(adapters=pool, dataset=sc.dataset)
+        stats = spec.length_stats()
+        for n_rep in replica_counts:
+            res = find_cluster_placement_joint(
+                est, pool, sc.dataset, n_replicas=n_rep,
+                horizon=horizon, seed=seed + i)
+            xs.append(encode_cluster_features(
+                [a.rate for a in pool], [a.rank for a in pool],
+                stats, n_rep))
+            ys.append([res.throughput, res.n_adapters, res.slots])
+            i += 1
+            if verbose and i % 10 == 0:
+                print(f"  labelled {i} cluster points")
+    return np.asarray(xs), np.asarray(ys)
+
+
+@dataclasses.dataclass
+class ClusterPlacementModel:
+    """RF trained on ClusterDigitalTwin joint sweeps: one sub-millisecond
+    ``recommend()`` per fleet-sizing decision (production phase)."""
+    model: RandomForest
+    feature_names: Tuple[str, ...] = CLUSTER_FEATURE_NAMES
+    target_names: Tuple[str, ...] = CLUSTER_TARGET_NAMES
+    fit_report: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def recommend(self, rates: Sequence[float], ranks: Sequence[int],
+                  length_stats: Dict[str, float],
+                  n_replicas: int) -> Dict[str, float]:
+        x = encode_cluster_features(rates, ranks, length_stats,
+                                    n_replicas)[None]
+        y = np.asarray(self.model.predict(x))[0]
+        return {
+            "total_throughput": float(y[0]),
+            "served_adapters": max(int(round(y[1])), 1),
+            "slots_per_replica": max(int(round(y[2])), 1),
+        }
+
+    def importances(self) -> Dict[str, float]:
+        imp = self.model.feature_importances()
+        return dict(zip(self.feature_names, imp.tolist()))
+
+
+def train_cluster_placement_model(
+        est: FittedEstimators, scenarios: Sequence, max_adapters: int,
+        replica_counts: Sequence[int] = (1, 2, 4),
+        horizon: float = 100.0, seed: int = 0,
+        n_trees: int = 10, max_depth: int = 5,
+        holdout: float = 0.2, verbose: bool = False
+        ) -> ClusterPlacementModel:
+    """Creation phase for the fleet: label with the joint twin sweep,
+    fit the paper-sized RF, report holdout SMAPE per target."""
+    xs, ys = label_cluster_scenarios(
+        est, scenarios, max_adapters, replica_counts=replica_counts,
+        horizon=horizon, seed=seed, verbose=verbose)
+    model = RandomForest(n_trees=n_trees, max_depth=max_depth, seed=seed)
+    n_train = max(int((1.0 - holdout) * len(xs)), 1)
+    model.fit(xs[:n_train], ys[:n_train])
+    report: Dict[str, float] = {}
+    if len(xs) > n_train:
+        pred = np.asarray(model.predict(xs[n_train:]))
+        for j, name in enumerate(CLUSTER_TARGET_NAMES):
+            report[f"smape_{name}"] = smape_vec(pred[:, j],
+                                                ys[n_train:, j])
+    return ClusterPlacementModel(model=model, fit_report=report)
 
 
 def find_optimal_placement(

@@ -2,19 +2,29 @@
 affinity router, on CPU via the synthetic executor (full-scale fleet
 behaviour without a GPU) or the real JAX executor per replica.
 
+Offline (route everything up front, then serve):
+
     python -m repro.launch.serve_cluster --replicas 2
-    python -m repro.launch.serve_cluster --replicas 4 --adapters 64 \
+    python -m repro.launch.serve_cluster --replicas 4 --adapters 64 \\
         --slots 8,8,4,4 --policy affinity --compare-policies
+
+Online (epoch loop: heartbeats, failure drain, optional rebalancing):
+
+    python -m repro.launch.serve_cluster --replicas 2 --online --rebalance
+    python -m repro.launch.serve_cluster --replicas 3 --online --rebalance \\
+        --drift 3 --kill 1@30 --epoch 5
 """
 from __future__ import annotations
 
 import argparse
 from typing import List
 
-from ..core.workload import WorkloadSpec, generate_requests, make_adapter_pool
-from ..serving import (ClusterMetrics, ClusterRouter, HardwareProfile,
-                       ServingCluster, SyntheticExecutor,
-                       make_replica_specs)
+from ..core.workload import (WorkloadSpec, generate_drifting_requests,
+                             generate_requests, make_adapter_pool,
+                             rotating_hot_phases)
+from ..serving import (ClusterMetrics, ClusterRouter, FailureEvent,
+                       HardwareProfile, RebalancePolicy, ServingCluster,
+                       SyntheticExecutor, make_replica_specs)
 from ..serving.cluster import POLICIES
 
 
@@ -26,6 +36,20 @@ def _int_list(text: str, n: int, name: str) -> List[int]:
         raise SystemExit(f"--{name}: expected 1 or {n} values, got "
                          f"{len(vals)}")
     return vals
+
+
+def _failures(specs: List[str], n_replicas: int) -> List[FailureEvent]:
+    out = []
+    for s in specs:
+        try:
+            rep, at = s.split("@")
+            out.append(FailureEvent(replica=int(rep), at=float(at)))
+        except ValueError:
+            raise SystemExit(f"--kill: expected REPLICA@TIME, got {s!r}")
+        if not 0 <= out[-1].replica < n_replicas:
+            raise SystemExit(f"--kill: replica {out[-1].replica} out of "
+                             f"range for --replicas {n_replicas}")
+    return out
 
 
 def _report(tag: str, m: ClusterMetrics) -> None:
@@ -49,7 +73,15 @@ def run_once(args, policy: str, verbose: bool = True) -> ClusterMetrics:
     ranks = {a.uid: a.rank for a in pool}
     spec = WorkloadSpec(adapters=pool, dataset=args.dataset,
                         horizon=args.horizon, seed=args.seed)
-    reqs = generate_requests(spec)
+    if args.drift > 0:
+        phases = rotating_hot_phases(pool, args.horizon,
+                                     n_phases=args.drift,
+                                     hot_rate=max(args.rate * 8, 0.2),
+                                     cold_rate=args.rate / 4)
+        reqs = generate_drifting_requests(pool, args.dataset, args.horizon,
+                                          phases, seed=args.seed)
+    else:
+        reqs = generate_requests(spec)
 
     router = ClusterRouter(specs, policy=policy)
     executors = [SyntheticExecutor(profile, ranks, slots=s.adapter_slots,
@@ -57,14 +89,35 @@ def run_once(args, policy: str, verbose: bool = True) -> ClusterMetrics:
                                    seed=args.seed + i)
                  for i, s in enumerate(specs)]
     cluster = ServingCluster(router, executors)
-    metrics = cluster.run(reqs, horizon=args.horizon)
+
+    online = args.online or args.rebalance or args.kill or args.drift > 0
+    if online:
+        rebalancer = None
+        if args.rebalance:
+            load_cost = profile.load_cpu_base + \
+                profile.load_cpu_per_rank * args.rank
+            rebalancer = RebalancePolicy(
+                router, load_cost_fn=lambda uid: load_cost)
+        report = cluster.run_online(
+            reqs, horizon=args.horizon, epoch=args.epoch,
+            rebalancer=rebalancer,
+            failures=_failures(args.kill, args.replicas),
+            straggler_factor=args.straggler_factor)
+        metrics = report.metrics
+        if verbose:
+            print(f"  online: epochs={report.n_epochs} "
+                  f"migrations={len(report.migrations)} "
+                  f"rerouted={report.n_rerouted} "
+                  f"failures_detected={report.failures_detected}")
+    else:
+        metrics = cluster.run(reqs, horizon=args.horizon)
     if verbose:
         for i, (s, m) in enumerate(zip(specs, metrics.per_replica)):
             print(f"  replica {i}: slots={s.adapter_slots} "
                   f"kv={s.kv_capacity_tokens} -> "
                   f"thpt={m.throughput:.1f} tok/s finished={m.n_finished} "
                   f"loads={m.n_loads} starved={m.starved}")
-    _report(policy, metrics)
+    _report(policy + ("+online" if online else ""), metrics)
     return metrics
 
 
@@ -86,6 +139,24 @@ def main() -> None:
     ap.add_argument("--dataset", default="medium")
     ap.add_argument("--horizon", type=float, default=60.0)
     ap.add_argument("--seed", type=int, default=0)
+    # online loop -------------------------------------------------------- #
+    ap.add_argument("--online", action="store_true",
+                    help="epoch-driven loop (heartbeats, failure drain)")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="enable the EWMA adapter rebalancer (implies "
+                         "--online)")
+    ap.add_argument("--epoch", type=float, default=5.0,
+                    help="online loop window length (s)")
+    ap.add_argument("--kill", action="append", default=[],
+                    metavar="REPLICA@TIME",
+                    help="inject a replica failure, e.g. --kill 1@30 "
+                         "(implies --online; repeatable)")
+    ap.add_argument("--drift", type=int, default=0, metavar="N_PHASES",
+                    help="drifting-popularity workload with N phases "
+                         "(implies --online)")
+    ap.add_argument("--straggler-factor", type=float, default=0.0,
+                    help="flag replicas slower than FACTOR x fleet "
+                         "median step time (0 = off)")
     args = ap.parse_args()
 
     if args.compare_policies:

@@ -8,5 +8,8 @@ from .request import Adapter, Request  # noqa
 from .scheduler import Scheduler, StepPlan  # noqa
 from .router import PlacementRouter, ReplicaPlan, RouterState  # noqa
 from .cluster import (POLICIES, ClusterMetrics, ClusterRouter,  # noqa
-                      ReplicaSpec, RoutingPolicy, ServingCluster,
-                      make_replica_specs, register_policy)
+                      FailureEvent, OnlineReport, ReplicaSpec,
+                      RoutingPolicy, ServingCluster, make_replica_specs,
+                      register_policy)
+from .rebalance import (AdapterLoadTracker, Migration,  # noqa
+                        RebalancePolicy, RebalanceReport)

@@ -44,6 +44,17 @@ class AdapterSlotCache:
             return True
         return any(self.pinned.get(a, 0) == 0 for a in self.loaded)
 
+    def evict(self, uid: int) -> bool:
+        """Evict a specific adapter (migration source side).  Refuses when
+        the adapter is pinned by running requests or not resident."""
+        if uid not in self.loaded or self.pinned.get(uid, 0) > 0:
+            return False
+        del self.loaded[uid]
+        self.evict_count += 1
+        if self.dynamic and self._release is not None:
+            self._release(uid)
+        return True
+
     def evict_idle_lru(self) -> Optional[int]:
         victims = [a for a in self.loaded if self.pinned.get(a, 0) == 0]
         if not victims:

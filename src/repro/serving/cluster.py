@@ -16,17 +16,27 @@ pluggable policy:
 The router keeps a per-replica model of resident adapters (an LRU capped
 at the replica's slot count — mirroring ``AdapterSlotCache`` semantics)
 and of assigned work (prompt+output tokens, normalised by the replica's
-KV capacity so a half-size replica receives half the load).
+KV capacity so a half-size replica receives half the load).  It also
+tracks per-replica liveness (heartbeats), straggler flags, and
+per-adapter routed-token counters — the inputs of the online rebalancer
+(``repro.serving.rebalance``).
 
-``ServingCluster`` runs the routed partitions through real engines;
-``repro.core.cluster_twin.ClusterDigitalTwin`` runs the *same router*
-over estimator-backed engines so cluster-level placement can be labelled
-offline exactly as the paper does for one GPU.
+``ServingCluster`` runs the routed partitions through real engines.
+``ServingCluster.run`` is the one-shot offline path (route everything,
+then serve); ``ServingCluster.run_online`` is the epoch-driven living
+system: requests are routed as they arrive, replicas heartbeat each
+epoch, a dead or straggling replica is drained and its requests
+re-served by survivors, and an optional ``RebalancePolicy`` migrates
+resident adapters between replicas when load drifts.
+``repro.core.cluster_twin.ClusterDigitalTwin`` runs the *same router and
+loop* over estimator-backed engines so cluster-level placement can be
+labelled offline exactly as the paper does for one GPU.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Type, Union
+import math
+from typing import Dict, List, Optional, Sequence, Tuple, Type, Union
 
 from .engine import EngineConfig, ServingEngine
 from .metrics import ServingMetrics
@@ -108,7 +118,8 @@ class RoundRobinPolicy(RoutingPolicy):
         self._next = 0
 
     def choose(self, req: Request) -> int:
-        rep = self._next % self.router.n_replicas
+        live = self.router.eligible()
+        rep = live[self._next % len(live)]
         self._next += 1
         return rep
 
@@ -140,8 +151,10 @@ class AffinityPolicy(RoutingPolicy):
 
     def choose(self, req: Request) -> int:
         r = self.router
+        # stragglers stay eligible for adapters they already hold (warm
+        # routing is mitigation without migration); dead replicas never are
         holders = [i for i in range(r.n_replicas)
-                   if req.adapter in r.resident[i]]
+                   if r.alive[i] and req.adapter in r.resident[i]]
         if holders:
             rep = min(holders, key=lambda i: (r.load(i), i))
             floor = r.load(r.least_loaded())
@@ -162,6 +175,12 @@ class ClusterRouter:
     replica's ``AdapterSlotCache`` holds.  Assigned load is cumulative
     prompt+output tokens normalised by KV capacity, so heterogeneous
     replicas are compared on relative utilisation.
+
+    Liveness: ``alive``/``straggler`` flags gate policy choices (dead
+    replicas are never routable; stragglers receive no *new* adapters but
+    keep serving ones they already hold).  ``heartbeat``/``dead_replicas``
+    implement the online loop's failure detector; ``migrate`` moves a
+    residency entry between replicas on behalf of the rebalancer.
     """
 
     def __init__(self, specs: Sequence[ReplicaSpec],
@@ -187,8 +206,14 @@ class ClusterRouter:
         self.resident: List[Dict[int, int]] = [{} for _ in range(n)]
         self.assigned_tokens = [0.0] * n
         self.assigned_requests = [0] * n
+        # adapter uid -> cumulative routed tokens, per replica (rebalancer)
+        self.routed_tokens: List[Dict[int, float]] = [{} for _ in range(n)]
         self.assignments: Dict[int, int] = {}     # request uid -> replica
         self.n_cold_routes = 0    # routed to a replica not holding adapter
+        self.n_migrations = 0
+        self.alive: List[bool] = [True] * n
+        self.straggler: List[bool] = [False] * n
+        self.last_heartbeat: List[float] = [0.0] * n
         self._seq = 0
         self.policy.reset()
 
@@ -196,19 +221,72 @@ class ClusterRouter:
     def n_replicas(self) -> int:
         return len(self.specs)
 
+    def live_replicas(self) -> List[int]:
+        return [i for i in range(self.n_replicas) if self.alive[i]]
+
+    def eligible(self) -> List[int]:
+        """Replicas new adapters may be routed to: alive and, when at
+        least one non-straggler is alive, not straggling."""
+        live = self.live_replicas()
+        if not live:
+            raise RuntimeError("no alive replicas")
+        fast = [i for i in live if not self.straggler[i]]
+        return fast or live
+
     def load(self, rep: int) -> float:
         """Capacity-normalised cumulative assigned work."""
         return self.assigned_tokens[rep] / max(
             self.specs[rep].kv_capacity_tokens, 1)
 
     def least_loaded(self) -> int:
-        return min(range(self.n_replicas), key=lambda i: (self.load(i), i))
+        return min(self.eligible(), key=lambda i: (self.load(i), i))
+
+    # ------------------------------------------------------------------ #
+    # liveness / failure detection
+    # ------------------------------------------------------------------ #
+    def heartbeat(self, rep: int, now: float) -> None:
+        self.last_heartbeat[rep] = max(self.last_heartbeat[rep], now)
+
+    def dead_replicas(self, now: float, timeout: float) -> List[int]:
+        """Alive replicas whose last heartbeat is older than ``timeout``."""
+        return [i for i in self.live_replicas()
+                if now - self.last_heartbeat[i] > timeout]
+
+    def mark_dead(self, rep: int) -> List[int]:
+        """Drain a replica from the routing tables; returns the adapters
+        the router believed resident there (for re-warming elsewhere)."""
+        self.alive[rep] = False
+        orphaned = sorted(self.resident[rep])
+        self.resident[rep] = {}
+        if not any(self.alive):
+            raise RuntimeError("all replicas dead")
+        return orphaned
+
+    def mark_straggler(self, rep: int, flag: bool = True) -> None:
+        self.straggler[rep] = flag
+
+    # ------------------------------------------------------------------ #
+    # migration (rebalancer side-channel)
+    # ------------------------------------------------------------------ #
+    def migrate(self, adapter: int, src: int, dst: int) -> None:
+        """Move an adapter's believed residency from ``src`` to ``dst``."""
+        self.resident[src].pop(adapter, None)
+        self._seq += 1
+        res = self.resident[dst]
+        slots = self.specs[dst].adapter_slots
+        if adapter not in res and slots > 0 and len(res) >= slots:
+            lru = min(res, key=res.get)
+            del res[lru]
+        res[adapter] = self._seq
+        self.n_migrations += 1
 
     # ------------------------------------------------------------------ #
     def route(self, req: Request) -> int:
         rep = self.policy.choose(req)
         if not 0 <= rep < self.n_replicas:
             raise ValueError(f"policy chose invalid replica {rep}")
+        if not self.alive[rep]:
+            raise ValueError(f"policy chose dead replica {rep}")
         self._commit(rep, req)
         return rep
 
@@ -222,8 +300,11 @@ class ClusterRouter:
                 lru = min(res, key=res.get)
                 del res[lru]
         res[req.adapter] = self._seq
-        self.assigned_tokens[rep] += req.prompt_len + req.output_len
+        tokens = req.prompt_len + req.output_len
+        self.assigned_tokens[rep] += tokens
         self.assigned_requests[rep] += 1
+        rt = self.routed_tokens[rep]
+        rt[req.adapter] = rt.get(req.adapter, 0.0) + tokens
         self.assignments[req.uid] = rep
 
     def partition(self, requests: Sequence[Request]) -> List[List[Request]]:
@@ -240,6 +321,8 @@ class ClusterRouter:
             "assigned_tokens": list(self.assigned_tokens),
             "loads": [self.load(i) for i in range(self.n_replicas)],
             "n_cold_routes": self.n_cold_routes,
+            "n_migrations": self.n_migrations,
+            "alive": list(self.alive),
         }
 
 
@@ -311,13 +394,37 @@ class ClusterMetrics:
 # the cluster itself
 # --------------------------------------------------------------------------- #
 
+@dataclasses.dataclass(frozen=True)
+class FailureEvent:
+    """Kill ``replica`` at virtual time ``at`` (it stops stepping and
+    heartbeating; the failure detector finds out later)."""
+    replica: int
+    at: float
+
+
+@dataclasses.dataclass
+class OnlineReport:
+    """Outcome of one ``run_online``: aggregate metrics + the living-system
+    event log (migrations, detected failures, straggler epochs)."""
+    metrics: Optional[ClusterMetrics]
+    n_epochs: int
+    migrations: List[object]
+    failures_detected: Dict[int, float]        # replica -> detection time
+    n_rerouted: int
+    straggler_epochs: Dict[int, int]           # replica -> #epochs flagged
+    router_summary: Dict[str, object]
+
+
 class ServingCluster:
     """N ``ServingEngine`` replicas behind a ``ClusterRouter``.
 
     Each replica is an independent machine with its own executor and
-    virtual clock; the router decides the partition of the request
-    stream, the engines serve their partitions, and the per-replica
-    metrics are aggregated into ``ClusterMetrics``.
+    virtual clock.  ``run`` is the offline path: the router partitions
+    the full stream up front and each engine serves its partition.
+    ``run_online`` is the epoch-driven living system: arrivals are routed
+    window by window, replicas heartbeat, failures are detected and
+    drained onto survivors, and a pluggable rebalancer migrates resident
+    adapters as traffic drifts.
     """
 
     def __init__(self, router: ClusterRouter, executors: Sequence):
@@ -339,3 +446,159 @@ class ServingCluster:
         per = [eng.run(part, horizon=horizon)
                for eng, part in zip(self.engines, parts)]
         return ClusterMetrics.aggregate(per)
+
+    # ------------------------------------------------------------------ #
+    # online (epoch-driven) serving
+    # ------------------------------------------------------------------ #
+    def run_online(self, requests: Sequence[Request], horizon: float,
+                   epoch: float = 5.0, rebalancer=None,
+                   failures: Sequence[FailureEvent] = (),
+                   heartbeat_timeout: Optional[float] = None,
+                   straggler_factor: float = 0.0,
+                   drain: bool = True,
+                   max_drain_epochs: int = 1000) -> OnlineReport:
+        """Serve the stream in ``epoch``-long windows.
+
+        Per window: (1) route the window's arrivals with the router's
+        *current* residency/liveness beliefs, (2) advance every live
+        engine's clock to the window end (a killed engine stops at its
+        kill time and goes silent), (3) detect replicas whose heartbeat
+        is older than ``heartbeat_timeout`` (default ``1.5 * epoch``),
+        drain their unfinished requests and re-route them to survivors
+        (recompute semantics: progress reset, preemption counted),
+        (4) flag stragglers (mean executed-step time above
+        ``straggler_factor`` x the fleet median; 0 disables) so new
+        adapters route away from them, and (5) let ``rebalancer`` migrate
+        resident adapters, charging each migration's Fig. 4 load cost to
+        the destination replica's clock.
+
+        With ``drain`` the loop keeps running windows past ``horizon``
+        (no new arrivals) until every routed request finished — this is
+        what "a dead replica's requests complete on survivors" means.
+        """
+        if epoch <= 0:
+            raise ValueError(f"epoch must be positive, got {epoch}")
+        router = self.router
+        router.reset()
+        for eng in self.engines:
+            eng.reset_stream()
+        hb_timeout = (1.5 * epoch) if heartbeat_timeout is None \
+            else heartbeat_timeout
+        killed_at = {f.replica: f.at for f in failures}
+        stream = sorted(requests, key=lambda r: r.arrival)
+        idx = 0
+        report = OnlineReport(
+            metrics=None, n_epochs=0, migrations=[],
+            failures_detected={}, n_rerouted=0, straggler_epochs={},
+            router_summary={})
+        # per-replica (busy_time, exec_steps) snapshots for stragglers
+        snap: List[Tuple[float, int]] = [(0.0, 0) for _ in self.engines]
+        tok_snap: List[int] = [0] * len(self.engines)
+
+        t = 0.0
+        extra = 0
+        while t < horizon or (drain and extra < max_drain_epochs
+                              and any(r.finished_at is None
+                                      for r in stream)):
+            if t >= horizon:
+                extra += 1
+            t1 = min(t + epoch, horizon) if t < horizon else t + epoch
+            report.n_epochs += 1
+
+            # (1) route this window's arrivals (batched per engine: one
+            # submit-sort per replica per window, not per request)
+            window: List[List[Request]] = [[] for _ in self.engines]
+            while idx < len(stream) and stream[idx].arrival < t1:
+                req = stream[idx]
+                window[router.route(req)].append(req)
+                idx += 1
+            for eng, batch in zip(self.engines, window):
+                eng.submit(batch)
+
+            # (2) advance engines; heartbeat the ones that survive it
+            for i, eng in enumerate(self.engines):
+                if not router.alive[i]:
+                    continue
+                kill = killed_at.get(i, math.inf)
+                if kill <= t:
+                    continue                      # silently dead already
+                eng.run_until(min(t1, kill), strict=True)
+                if kill > t1:
+                    router.heartbeat(i, t1)
+
+            # (3) failure detection -> drain + re-route on survivors
+            fleet_down = False
+            for i in router.dead_replicas(now=t1, timeout=hb_timeout):
+                if len(router.live_replicas()) == 1:
+                    # the last live replica died: total outage.  Degrade
+                    # gracefully — report what finished; its unfinished
+                    # requests stay in its accounting (nowhere to go)
+                    router.alive[i] = False
+                    router.resident[i] = {}
+                    report.failures_detected[i] = t1
+                    self.engines[i].halted = True
+                    fleet_down = True
+                    break
+                router.mark_dead(i)
+                report.failures_detected[i] = t1
+                orphans = self.engines[i].drain()
+                rerouted: List[List[Request]] = [[] for _ in self.engines]
+                for req in sorted(orphans, key=lambda r: r.arrival):
+                    req.generated = 0
+                    req.admitted_at = None
+                    req.first_token_at = None
+                    req.finished_at = None
+                    req.token_times = []
+                    req.n_preemptions += 1
+                    rerouted[router.route(req)].append(req)
+                    report.n_rerouted += 1
+                for eng, batch in zip(self.engines, rerouted):
+                    eng.submit(batch)
+            if fleet_down:
+                break
+
+            # (4) straggler flags from observed per-window step times
+            if straggler_factor > 0:
+                means = {}
+                for i, eng in enumerate(self.engines):
+                    if not router.alive[i]:
+                        continue
+                    db = eng.busy_time - snap[i][0]
+                    ds = eng.n_exec_steps - snap[i][1]
+                    if ds > 0:
+                        means[i] = db / ds
+                if len(means) >= 2:
+                    vals = sorted(means.values())
+                    med = vals[(len(vals) - 1) // 2]   # lower median: a
+                    # 2-replica fleet compares the slow one to the fast one
+                    for i, m in means.items():
+                        slow = m > straggler_factor * med
+                        router.mark_straggler(i, slow)
+                        if slow:
+                            report.straggler_epochs[i] = \
+                                report.straggler_epochs.get(i, 0) + 1
+            snap = [(eng.busy_time, eng.n_exec_steps)
+                    for eng in self.engines]
+
+            # (5) online rebalancing (migration cost charged on preload)
+            if rebalancer is not None:
+                served = [eng.n_tokens_out - tok_snap[i]
+                          for i, eng in enumerate(self.engines)]
+                backlog = [eng.scheduler.n_waiting + eng.scheduler.n_running
+                           for eng in self.engines]
+                rebalancer.observe(now=t1, window_s=t1 - t,
+                                   served_tokens=served, backlog=backlog)
+                for mig in rebalancer.propose(now=t1):
+                    if self.engines[mig.dst].preload_adapter(
+                            mig.adapter, mig.cost_s):
+                        self.engines[mig.src].evict_adapter(mig.adapter)
+                        router.migrate(mig.adapter, mig.src, mig.dst)
+                        rebalancer.commit(mig)
+                        report.migrations.append(mig)
+            tok_snap = [eng.n_tokens_out for eng in self.engines]
+            t = t1
+
+        report.metrics = ClusterMetrics.aggregate(
+            [eng.finalize() for eng in self.engines])
+        report.router_summary = router.summary()
+        return report

@@ -7,10 +7,20 @@ greedy paged-KV allocation with preemption-by-recompute, LRU adapter slots.
 This is the "real system" that the Digital Twin (repro.core.digital_twin)
 replicates: identical scheduling semantics, real (measured or
 hidden-profile) step times.
+
+The loop is *resumable*: ``submit()`` enqueues arrivals, ``run_until()``
+advances the virtual clock to a bound and returns (the cluster's online
+epoch loop interleaves replicas this way), ``finalize()`` summarizes.
+``run()`` composes the three and keeps the original single-shot
+semantics.  Fault-tolerance hooks: ``drain()`` pulls every unfinished
+request off a dead replica for re-routing; ``preload_adapter()`` /
+``evict_adapter()`` let a rebalancer migrate adapter residency between
+replicas, charging the migration's load cost to this replica's clock.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional
 
 from .adapter_cache import AdapterSlotCache
@@ -65,37 +75,85 @@ class ServingEngine:
             self.adapters = AdapterSlotCache(cfg.adapter_slots)
         self.scheduler = Scheduler(self.kv, self.adapters, cfg.max_running)
         self.trace: List[StepTrace] = []
+        self.reset_stream()
 
-    def run(self, requests: List[Request], horizon: Optional[float] = None,
-            record_trace: bool = False) -> ServingMetrics:
-        pending = sorted(requests, key=lambda r: r.arrival)
-        t = 0.0
-        i = 0
-        max_kv = 0.0
-        steps = 0
-        while steps < self.cfg.max_steps:
-            steps += 1
-            if horizon is not None and t >= horizon:
-                break
+    # ------------------------------------------------------------------ #
+    # resumable stream state
+    # ------------------------------------------------------------------ #
+    def reset_stream(self) -> None:
+        """Start a fresh request stream (clock back to zero)."""
+        self.clock = 0.0
+        self.halted = False
+        self._pending: List[Request] = []
+        self._next = 0
+        self._accepted: List[Request] = []
+        self._iters = 0
+        self._max_kv = 0.0
+        # busy-time / executed-step / output-token counters (straggler
+        # detection + the rebalancer's observed service rate)
+        self.busy_time = 0.0
+        self.n_exec_steps = 0
+        self.n_tokens_out = 0
+
+    def submit(self, requests: List[Request]) -> None:
+        """Enqueue arrivals (any order); may be called between epochs."""
+        if not requests:
+            return
+        rest = self._pending[self._next:]
+        self._pending = sorted(rest + list(requests), key=lambda r: r.arrival)
+        self._next = 0
+        self._accepted.extend(requests)
+
+    def run_until(self, t_end: Optional[float] = None,
+                  record_trace: bool = False, strict: bool = False) -> None:
+        """Advance the continuous-batching loop until the clock reaches
+        ``t_end`` (None = run the submitted stream to completion).
+
+        ``strict`` keeps the clock from fast-forwarding past ``t_end``
+        toward future arrivals — the online epoch loop needs that so a
+        replica idle *this* epoch is still at ``t_end`` when the next
+        epoch submits more work.  Non-strict mode reproduces the original
+        single-shot ``run()`` semantics exactly.
+        """
+        if self.halted:
+            return
+        while self._iters < self.cfg.max_steps:
+            self._iters += 1
+            t = self.clock
+            if t_end is not None and t >= t_end:
+                return
             # idle fast-forward
             if not self.scheduler.has_work:
-                if i >= len(pending):
-                    break
-                t = max(t, pending[i].arrival)
-            while i < len(pending) and pending[i].arrival <= t:
-                self.scheduler.add([pending[i]])
-                i += 1
+                if self._next >= len(self._pending):
+                    return
+                nxt = self._pending[self._next].arrival
+                if strict and t_end is not None and nxt >= t_end:
+                    self.clock = max(self.clock, min(nxt, t_end))
+                    return
+                t = max(t, nxt)
+            while self._next < len(self._pending) and \
+                    self._pending[self._next].arrival <= t:
+                self.scheduler.add([self._pending[self._next]])
+                self._next += 1
             plan = self.scheduler.schedule(t)
             if not plan.running:
                 # blocked (e.g. waiting requests that cannot be admitted yet)
-                if i < len(pending):
-                    t = max(t, pending[i].arrival)
+                if self._next < len(self._pending):
+                    nxt = self._pending[self._next].arrival
+                    if strict and t_end is not None and nxt >= t_end:
+                        self.clock = max(self.clock, min(nxt, t_end))
+                        return
+                    self.clock = max(t, nxt)
                     continue
-                break
+                self.clock = t
+                return
             timing: StepTiming = self.executor.step(
                 plan, self.scheduler.n_waiting)
             t += timing.total
-            max_kv = max(max_kv, self.kv.used_fraction)
+            self.busy_time += timing.total
+            self.n_exec_steps += 1
+            self.n_tokens_out += len(plan.running)
+            self._max_kv = max(self._max_kv, self.kv.used_fraction)
             if record_trace:
                 self.trace.append(StepTrace(
                     t, len(plan.running), self.scheduler.n_waiting,
@@ -108,8 +166,71 @@ class ServingEngine:
                 if req.done:
                     req.finished_at = t
                     self.scheduler.finish(req)
-        duration = max(t, 1e-9)
-        arrived = [r for r in requests if r.arrival <= duration]
+            self.clock = t
+
+    def finalize(self) -> ServingMetrics:
+        duration = max(self.clock, 1e-9)
+        arrived = [r for r in self._accepted if r.arrival <= duration]
         offered = sum(r.output_len for r in arrived)
-        return summarize(requests, duration, offered, max_kv,
+        return summarize(self._accepted, duration, offered, self._max_kv,
                          self.adapters.load_count)
+
+    # ------------------------------------------------------------------ #
+    # fault-tolerance / rebalancing hooks
+    # ------------------------------------------------------------------ #
+    def drain(self) -> List[Request]:
+        """Pull every unfinished request off this (dead) replica.
+
+        Frees their KV blocks and adapter pins, halts the engine, and
+        removes them from this engine's accounting so the survivor that
+        re-serves them is the only replica counting them.  Progress is
+        NOT reset here — the re-router decides recompute semantics.
+        """
+        orphans = (list(self.scheduler.running)
+                   + list(self.scheduler.waiting)
+                   + self._pending[self._next:])
+        for req in list(self.scheduler.running):
+            self.kv.free(req.uid)
+            self.adapters.unpin(req.adapter)
+        self.scheduler.running.clear()
+        self.scheduler.waiting.clear()
+        self._pending = []
+        self._next = 0
+        dead_uids = {r.uid for r in orphans}
+        self._accepted = [r for r in self._accepted
+                          if r.uid not in dead_uids]
+        self.halted = True
+        return orphans
+
+    def preload_adapter(self, uid: int, cost_s: float = 0.0) -> bool:
+        """Warm-load an adapter (migration target side), charging the
+        Fig. 4 load cost to this replica's clock.  An adapter already
+        resident here is a free success (the migration is belief-only).
+        Returns False when the cache has no loadable slot (migration
+        must be declined)."""
+        if self.adapters.is_loaded(uid):
+            self.adapters.touch(uid, self.clock)
+            return True
+        if not self.adapters.can_load(uid):
+            return False
+        self.adapters.load(uid, self.clock)
+        # the clock pays the Fig. 4 cost, but busy_time stays pure step
+        # execution time: it feeds the straggler detector's mean-step
+        # estimate, which a migration must not inflate
+        self.clock += cost_s
+        return True
+
+    def evict_adapter(self, uid: int) -> bool:
+        """Drop an adapter's residency (migration source side)."""
+        return self.adapters.evict(uid)
+
+    # ------------------------------------------------------------------ #
+    def run(self, requests: List[Request], horizon: Optional[float] = None,
+            record_trace: bool = False) -> ServingMetrics:
+        """Single-shot: submit the whole stream, run to horizon/completion,
+        summarize.  Identical semantics to the pre-resumable engine."""
+        self.reset_stream()
+        self.submit(requests)
+        self.run_until(horizon if horizon is not None else math.inf,
+                       record_trace=record_trace)
+        return self.finalize()

@@ -1,0 +1,223 @@
+"""Online adapter rebalancing: EWMA load drift -> honest migrations.
+
+S-LoRA-style multi-adapter serving makes adapter *residency* the dominant
+cluster cost: once traffic drifts away from the distribution the router
+saw when adapters first landed, the hot set can concentrate on one
+replica while others idle.  ``RebalancePolicy`` watches the router's
+per-(replica, adapter) routed-token counters through an EWMA, and when
+the fleet's capacity-normalised load imbalance exceeds a threshold it
+proposes migrating resident adapters from the most- to the least-loaded
+replica.
+
+Migrations are *honest*: each one carries the Fig. 4 adapter-load cost
+(``load_cost_fn``, e.g. the fitted ``FittedEstimators.lat_load``), which
+the online loop charges to the destination replica's clock, and the
+policy declines any migration whose cost exceeds its expected benefit
+(the tokens the adapter is forecast to route in the next
+``gain_window_s``, converted to seconds through the destination's
+observed service rate).  A cluster with a single live replica, balanced
+load, or only net-negative candidates proposes nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Migration:
+    """Move ``adapter``'s residency from replica ``src`` to ``dst``,
+    paying ``cost_s`` (the Fig. 4 load) on the destination."""
+    adapter: int
+    src: int
+    dst: int
+    cost_s: float
+
+
+@dataclasses.dataclass
+class RebalanceReport:
+    n_proposed: int = 0
+    n_committed: int = 0
+    n_declined_cost: int = 0
+    n_rounds_balanced: int = 0
+
+
+class AdapterLoadTracker:
+    """EWMA of per-(replica, adapter) routed token *rates* from the
+    router's cumulative counters."""
+
+    def __init__(self, n_replicas: int, alpha: float = 0.4):
+        self.alpha = alpha
+        self.rate: List[Dict[int, float]] = [{} for _ in range(n_replicas)]
+        self._last: List[Dict[int, float]] = [{} for _ in range(n_replicas)]
+
+    def update(self, routed_cum: List[Dict[int, float]],
+               window_s: float) -> None:
+        if window_s <= 0:
+            return
+        a = self.alpha
+        for rep, cum in enumerate(routed_cum):
+            last = self._last[rep]
+            rates = self.rate[rep]
+            for uid in set(cum) | set(rates):
+                delta = cum.get(uid, 0.0) - last.get(uid, 0.0)
+                inst = max(delta, 0.0) / window_s
+                rates[uid] = a * inst + (1 - a) * rates.get(uid, 0.0)
+            self._last[rep] = dict(cum)
+
+    def move(self, adapter: int, src: int, dst: int) -> None:
+        """Transfer an adapter's learned rate with its migration.
+
+        The ``_last`` baselines are NOT touched: they mirror the
+        router's per-replica cumulative counters, which a migration
+        does not change — future routed tokens keep diffing correctly
+        on both sides."""
+        r = self.rate[src].pop(adapter, 0.0)
+        self.rate[dst][adapter] = self.rate[dst].get(adapter, 0.0) + r
+
+    def replica_rate(self, rep: int) -> float:
+        return sum(self.rate[rep].values())
+
+
+class RebalancePolicy:
+    """Greedy donor->recipient adapter migration under an imbalance
+    threshold, with a cost/benefit veto.
+
+    Decision rule per round (deterministic):
+      1. capacity-normalised EWMA load per live replica; if
+         ``max <= threshold * mean`` the fleet is balanced -> no moves.
+      2. donor = most loaded, recipient = least loaded eligible replica.
+      3. candidate = the hottest adapter resident on the donor whose
+         normalised rate fits inside half the donor-recipient gap (so the
+         move cannot invert the imbalance).
+      4. benefit = EWMA tokens/s * gain_window_s; cost = load_cost_fn
+         seconds * recipient's observed tokens/s.  Decline when
+         ``cost >= benefit`` (net-negative migration).
+    """
+
+    def __init__(self, router, load_cost_fn: Optional[
+            Callable[[int], float]] = None,
+            threshold: float = 1.25, alpha: float = 0.4,
+            gain_window_s: Optional[float] = None,
+            max_moves_per_round: int = 2,
+            min_adapter_rate: float = 1e-6,
+            min_backlog: int = 4, backlog_ratio: float = 2.0):
+        self.router = router
+        self.load_cost_fn = load_cost_fn or (lambda uid: 0.02)
+        self.threshold = threshold
+        self.gain_window_s = gain_window_s
+        self.max_moves = max_moves_per_round
+        self.min_adapter_rate = min_adapter_rate
+        self.min_backlog = min_backlog
+        self.backlog_ratio = backlog_ratio
+        self.tracker = AdapterLoadTracker(router.n_replicas, alpha=alpha)
+        self.report = RebalanceReport()
+        # observed per-replica service rate (tokens/s EWMA) for the
+        # cost->tokens conversion, and per-replica queue depth EWMA (the
+        # heartbeat payload; smoothed so transient Poisson bursts don't
+        # trigger migrations) — both fed by observe()
+        self._service_rate: List[float] = [0.0] * router.n_replicas
+        self._backlog: List[float] = [0.0] * router.n_replicas
+        self._last_window_s = 0.0
+
+    # ------------------------------------------------------------------ #
+    def observe(self, now: float, window_s: float,
+                served_tokens: Optional[List[float]] = None,
+                backlog: Optional[List[int]] = None) -> None:
+        """Ingest one epoch of router counters plus the heartbeat
+        payload: the engines' served-token counts (service-rate EWMA)
+        and queue depths (the suffering signal)."""
+        self.tracker.update(self.router.routed_tokens, window_s)
+        self._last_window_s = window_s
+        if served_tokens is not None and window_s > 0:
+            a = self.tracker.alpha
+            for i, tok in enumerate(served_tokens):
+                inst = max(tok, 0.0) / window_s
+                self._service_rate[i] = \
+                    a * inst + (1 - a) * self._service_rate[i]
+        if backlog is not None:
+            a = self.tracker.alpha
+            self._backlog = [a * b + (1 - a) * prev
+                             for b, prev in zip(backlog, self._backlog)]
+
+    # ------------------------------------------------------------------ #
+    def _norm(self, rep: int, rate: float) -> float:
+        return rate / max(self.router.specs[rep].kv_capacity_tokens, 1)
+
+    def propose(self, now: float) -> List[Migration]:
+        r = self.router
+        live = [i for i in r.live_replicas()]
+        if len(live) < 2:
+            return []
+        gain_window = self.gain_window_s or max(self._last_window_s, 1e-9)
+        # working copy of normalised per-replica load rates
+        loads = {i: self._norm(i, self.tracker.replica_rate(i))
+                 for i in live}
+        moved: List[Migration] = []
+        for _ in range(self.max_moves):
+            mean = sum(loads.values()) / len(loads)
+            donor = max(live, key=lambda i: (loads[i], -i))
+            recips = [i for i in live if not r.straggler[i]] or live
+            recip = min(recips, key=lambda i: (loads[i], i))
+            if donor == recip or mean <= 0:
+                break
+            if loads[donor] <= self.threshold * mean:
+                self.report.n_rounds_balanced += 1
+                break
+            # only act when the donor is actually suffering: migration is
+            # pointless (and its load cost pure waste) while every queue
+            # drains within the epoch
+            if self._backlog[donor] < self.min_backlog or \
+                    self._backlog[donor] < self.backlog_ratio * \
+                    max(self._backlog[recip], 1):
+                self.report.n_rounds_balanced += 1
+                break
+            gap = loads[donor] - loads[recip]
+            mig = self._pick(donor, recip, gap, gain_window)
+            if mig is None:
+                break
+            moved.append(mig)
+            rate = self.tracker.rate[donor].get(mig.adapter, 0.0)
+            loads[donor] -= self._norm(donor, rate)
+            loads[recip] += self._norm(recip, rate)
+        return moved
+
+    def _pick(self, donor: int, recip: int, gap: float,
+              gain_window: float) -> Optional[Migration]:
+        r = self.router
+        rates = self.tracker.rate[donor]
+        # hottest first; only adapters the router believes resident on the
+        # donor and not already resident on the recipient
+        cands = sorted(
+            (uid for uid in r.resident[donor]
+             if uid not in r.resident[recip]
+             and rates.get(uid, 0.0) > self.min_adapter_rate),
+            key=lambda uid: (-rates.get(uid, 0.0), uid))
+        for uid in cands:
+            rate = rates.get(uid, 0.0)
+            # no-inversion guard: the donor sheds norm(donor) while the
+            # recipient gains norm(recip) (different on heterogeneous
+            # fleets) — the move must not flip who is more loaded
+            if self._norm(donor, rate) + self._norm(recip, rate) > gap:
+                continue                      # would overshoot the gap
+            self.report.n_proposed += 1
+            cost_s = float(self.load_cost_fn(uid))
+            benefit_tokens = rate * gain_window
+            srv = self._service_rate[recip]
+            if srv <= 0:
+                vals = [v for v in self._service_rate if v > 0]
+                srv = sum(vals) / len(vals) if vals else 0.0
+            cost_tokens = cost_s * srv if srv > 0 \
+                else (math.inf if cost_s > gain_window else 0.0)
+            if cost_tokens >= benefit_tokens:
+                self.report.n_declined_cost += 1
+                continue                      # net-negative migration
+            return Migration(adapter=uid, src=donor, dst=recip,
+                             cost_s=cost_s)
+        return None
+
+    def commit(self, mig: Migration) -> None:
+        """The online loop executed this migration; update the tracker."""
+        self.tracker.move(mig.adapter, mig.src, mig.dst)
+        self.report.n_committed += 1

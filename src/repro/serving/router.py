@@ -1,4 +1,4 @@
-"""Multi-replica router — the paper's production phase.
+"""Plan-level placement router (model-predicted bin-packing).
 
 Uses the placement pipeline's predictions (per-node adapter capacity +
 optimal slot count) to (a) pack adapters onto replicas (greedy bin-pack on
@@ -6,10 +6,13 @@ predicted capacity, cf. dLoRA's proactive placement), (b) configure each
 replica's ``adapter_slots``, and (c) admission-control so no replica is
 pushed past its predicted starvation boundary.
 
-Fault tolerance: replicas that stop heartbeating are drained and their
-adapters re-packed onto survivors; straggling replicas (observed ITL
-exceeding `straggler_factor` x the fleet median) get new adapters routed
-away (mitigation without migration).
+NOTE: the request-level fleet path lives in ``repro.serving.cluster`` —
+``ClusterRouter`` + ``ServingCluster.run_online`` absorbed this module's
+heartbeat/straggler semantics (dead replicas are drained onto survivors;
+stragglers stop receiving new adapters) and add online rebalancing
+(``repro.serving.rebalance``).  ``PlacementRouter`` remains the
+*plan-level* tool: one model call decides the initial adapter->replica
+packing that the online loop then keeps healthy.
 """
 from __future__ import annotations
 

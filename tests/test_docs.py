@@ -1,0 +1,35 @@
+"""Docs integrity: links + benchmark-table coverage (fast, tier-1) and
+fenced-example execution (slow; the CI docs job also runs it directly)."""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_internal_links_resolve():
+    assert check_docs.check_links() == []
+
+
+def test_benchmark_table_covers_all_benches():
+    assert check_docs.check_benchmark_table() == []
+
+
+def test_docs_name_every_new_subsystem():
+    """The cluster guide documents what the code registers: every
+    routing policy and every serve_cluster flag."""
+    from repro.serving.cluster import POLICIES
+    text = (check_docs.ROOT / "docs" / "cluster.md").read_text()
+    for name in ("affinity", "least-loaded", "round-robin"):
+        assert name in POLICIES and f"`{name}`" in text
+    for flag in ("--online", "--rebalance", "--epoch", "--kill",
+                 "--drift", "--straggler-factor"):
+        assert flag in text, f"serve_cluster flag {flag} undocumented"
+
+
+@pytest.mark.slow
+def test_fenced_python_examples_execute():
+    assert check_docs.check_examples() == []

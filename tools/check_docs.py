@@ -1,0 +1,149 @@
+"""Docs gate: links resolve, the benchmark table is complete, examples run.
+
+    PYTHONPATH=src python tools/check_docs.py              # everything
+    PYTHONPATH=src python tools/check_docs.py --links-only # fast (tier-1)
+
+Three checks over README.md + docs/*.md:
+
+1. **links** — every relative markdown link/image target exists
+   (anchors stripped; http(s)/mailto links are skipped);
+2. **benchmark table** — every module in ``benchmarks.run.BENCHES``
+   is mentioned in docs/benchmarks.md, and every ``benchmarks/*.py``
+   path mentioned anywhere in the docs exists (the figure → script map
+   cannot rot in either direction);
+3. **examples** — every fenced ```python block executes in a fresh
+   interpreter with PYTHONPATH=src and smoke sizes
+   (REPRO_BENCH_SMOKE=1).  A block preceded by an HTML comment line
+   ``<!-- docs: no-run -->`` is skipped.
+
+Exit status is non-zero on the first category with failures.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+NO_RUN = "<!-- docs: no-run -->"
+
+
+def check_links() -> List[str]:
+    errors = []
+    for md in DOC_FILES:
+        for n, line in enumerate(md.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:",
+                                      "#")):
+                    continue
+                path = (md.parent / target.split("#")[0]).resolve()
+                if not path.is_relative_to(ROOT):
+                    # only GitHub-side virtual paths (the CI badge) may
+                    # escape the repo; anything else is a broken link
+                    if "actions/workflows" not in target:
+                        errors.append(f"{md.relative_to(ROOT)}:{n}: "
+                                      f"link escapes the repo -> {target}")
+                    continue
+                if not path.exists():
+                    errors.append(f"{md.relative_to(ROOT)}:{n}: "
+                                  f"broken link -> {target}")
+    return errors
+
+
+def check_benchmark_table() -> List[str]:
+    errors = []
+    sys.path.insert(0, str(ROOT))
+    from benchmarks.run import BENCHES
+    table = (ROOT / "docs" / "benchmarks.md").read_text()
+    for name in BENCHES:
+        if f"benchmarks/{name}.py" not in table:
+            errors.append(f"docs/benchmarks.md: missing row for "
+                          f"benchmarks/{name}.py (in benchmarks.run."
+                          f"BENCHES)")
+    # any benchmarks/*.py path mentioned in any doc must exist
+    for md in DOC_FILES:
+        for m in re.finditer(r"benchmarks/(\w+)\.py", md.read_text()):
+            if not (ROOT / "benchmarks" / f"{m.group(1)}.py").exists():
+                errors.append(f"{md.relative_to(ROOT)}: references "
+                              f"missing {m.group(0)}")
+    return errors
+
+
+def extract_python_blocks(md: Path) -> List[Tuple[int, str]]:
+    blocks, buf, lang, start = [], [], None, 0
+    skip_next = False
+    for n, line in enumerate(md.read_text().splitlines(), 1):
+        if lang is None and line.strip() == NO_RUN:
+            skip_next = True
+            continue
+        m = FENCE_RE.match(line.strip())
+        if m and lang is None:
+            lang, buf, start = m.group(1), [], n
+            continue
+        if line.strip() == "```" and lang is not None:
+            if lang == "python" and not skip_next:
+                blocks.append((start, "\n".join(buf)))
+            lang = None
+            skip_next = False
+            continue
+        if lang is not None:
+            buf.append(line)
+    return blocks
+
+
+def check_examples() -> List[str]:
+    errors = []
+    env = dict(os.environ,
+               PYTHONPATH=f"{ROOT / 'src'}:{os.environ.get('PYTHONPATH', '')}",
+               REPRO_BENCH_SMOKE="1")
+    for md in DOC_FILES:
+        for start, code in extract_python_blocks(md):
+            proc = subprocess.run(
+                [sys.executable, "-"], input=code, text=True,
+                capture_output=True, cwd=ROOT, env=env, timeout=600)
+            where = f"{md.relative_to(ROOT)}: python block at line {start}"
+            if proc.returncode != 0:
+                tail = proc.stderr.strip().splitlines()[-8:]
+                errors.append(where + " failed:\n    "
+                              + "\n    ".join(tail))
+            else:
+                print(f"ok: {where}")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--links-only", action="store_true",
+                    help="skip executing the fenced python examples")
+    args = ap.parse_args()
+
+    failures = 0
+    for title, errs in (("links", check_links()),
+                        ("benchmark table", check_benchmark_table())):
+        if errs:
+            failures += len(errs)
+            print(f"FAIL [{title}]:")
+            for e in errs:
+                print(f"  {e}")
+        else:
+            print(f"ok: {title} ({len(DOC_FILES)} files)")
+    if not args.links_only:
+        errs = check_examples()
+        if errs:
+            failures += len(errs)
+            print("FAIL [examples]:")
+            for e in errs:
+                print(f"  {e}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
