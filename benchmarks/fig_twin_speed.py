@@ -1,0 +1,123 @@
+"""Twin fast-path speed: legacy vs FastTwin steps/sec + sweep points/sec.
+
+The paper's efficiency claim is that the Digital Twin makes training-data
+generation cheap; this figure tracks how cheap.  One representative heavy
+sweep point (96 adapters, ShareGPT-like lengths — the regime the
+placement-model labellers live in) is simulated by the legacy object-mode
+``DigitalTwin`` and by the struct-of-arrays ``FastTwin``; both runs must
+agree exactly (the equivalence contract) and the fast path must be >=10x
+cheaper locally (>=5x enforced in the CI smoke gate, which uses tiny
+sizes where fixed overheads bite harder).  A small scenario batch is then
+labelled through the ``SweepRunner`` to report end-to-end sweep
+points/sec, and the real engine's steps/sec is recorded so the shared
+scheduler micro-optimisations (swap-remove running set, O(1)
+``can_load``) stay visible in the trajectory.
+
+Results are written to ``BENCH_twin_speed.json`` at the repo root; the
+committed copy is refreshed per PR, so the perf trajectory lives in its
+git history.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from .common import CsvOut, fitted_estimators, is_smoke, run_real
+from repro.core import (DigitalTwin, FastTwin, SweepRunner, SweepTask,
+                        WorkloadSpec, make_adapter_pool, scenario_grid)
+
+MIN_SPEEDUP_SMOKE = 5.0       # CI gate (tiny sizes, noisy runners)
+MIN_SPEEDUP_FULL = 10.0       # the local acceptance claim
+
+
+def _best_of(fn, reps):
+    best, result = None, None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        result = fn()
+        dt = time.perf_counter() - t0
+        if best is None or dt < best:
+            best = dt
+    return best, result
+
+
+def main(out: CsvOut) -> None:
+    est = fitted_estimators()
+    smoke = is_smoke()
+    if smoke:
+        n_ad, slots, horizon, reps = 48, 6, 60.0, 2
+        rates = [0.3, 0.15, 0.1]     # slot-pressured: the sweep regime
+        n_scen, sweep_horizon, workers = 2, 20.0, 2
+    else:
+        n_ad, slots, horizon, reps = 96, 16, 240.0, 3
+        rates = [0.25, 0.1, 0.05]
+        n_scen, sweep_horizon, workers = 6, 60.0, None
+
+    # --- single-point twin speed (the unit of every sweep) -------------- #
+    pool = make_adapter_pool(n_ad, [8, 16, 32], rates)
+    spec = WorkloadSpec(adapters=pool, dataset="sharegpt", horizon=horizon,
+                        seed=7)
+    legacy = DigitalTwin(est, mode="mean")
+    fast = FastTwin(est, mode="mean")
+    t_legacy, res_l = _best_of(lambda: legacy.simulate(spec, slots=slots),
+                               reps)
+    t_fast, res_f = _best_of(lambda: fast.simulate(spec, slots=slots), reps)
+    if res_l.metrics.throughput != res_f.metrics.throughput or \
+            res_l.metrics.n_finished != res_f.metrics.n_finished:
+        raise RuntimeError(
+            "fast twin diverged from the legacy oracle: "
+            f"{res_f.metrics.throughput} vs {res_l.metrics.throughput}")
+    speedup = t_legacy / t_fast
+    # simulated-seconds per wall-second: the figure's headline rate
+    legacy_rate = res_l.metrics.duration / t_legacy
+    fast_rate = res_f.metrics.duration / t_fast
+    out.row("twin_legacy", t_legacy * 1e6,
+            f"sim_s_per_s={legacy_rate:.0f}")
+    out.row("twin_fast", t_fast * 1e6,
+            f"sim_s_per_s={fast_rate:.0f};speedup={speedup:.1f}x")
+
+    # --- sweep harness: labelled points/sec ----------------------------- #
+    scenarios = scenario_grid(limit=n_scen, seed=13)
+    tasks = [SweepTask(pool=tuple(sc.pool(max(n_ad // 2, 8))),
+                       dataset=sc.dataset, horizon=sweep_horizon,
+                       seed=17 + i)
+             for i, sc in enumerate(scenarios)]
+    runner = SweepRunner(est, n_workers=workers)
+    t0 = time.perf_counter()
+    results = runner.map(tasks)
+    t_sweep = time.perf_counter() - t0
+    pts_per_s = len(results) / t_sweep
+    out.row("sweep_runner", t_sweep * 1e6,
+            f"points={len(results)};points_per_s={pts_per_s:.2f}")
+
+    # --- real engine step rate (shared scheduler micro-opts) ------------ #
+    eng_pool = make_adapter_pool(max(n_ad // 2, 8), [8, 16], [0.2])
+    t0 = time.perf_counter()
+    m = run_real(eng_pool, "medium", horizon / 2, slots, seed=23)
+    t_eng = time.perf_counter() - t0
+    eng_rate = m.duration / t_eng
+    out.row("engine_real", t_eng * 1e6, f"sim_s_per_s={eng_rate:.0f}")
+
+    # --- persist the trajectory ----------------------------------------- #
+    payload = {
+        "smoke": smoke,
+        "point": {"n_adapters": n_ad, "slots": slots, "horizon": horizon,
+                  "dataset": "sharegpt"},
+        "legacy_wall_s": round(t_legacy, 4),
+        "fast_wall_s": round(t_fast, 4),
+        "speedup": round(speedup, 2),
+        "legacy_sim_s_per_s": round(legacy_rate, 1),
+        "fast_sim_s_per_s": round(fast_rate, 1),
+        "sweep_points": len(results),
+        "sweep_points_per_s": round(pts_per_s, 3),
+        "engine_sim_s_per_s": round(eng_rate, 1),
+    }
+    path = Path(__file__).resolve().parent.parent / "BENCH_twin_speed.json"
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+
+    floor = MIN_SPEEDUP_SMOKE if smoke else MIN_SPEEDUP_FULL
+    if speedup < floor:
+        raise RuntimeError(
+            f"fast twin speedup {speedup:.1f}x below the {floor:.0f}x "
+            f"floor ({'smoke' if smoke else 'full'} config)")

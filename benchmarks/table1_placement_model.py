@@ -10,8 +10,8 @@ import time
 import numpy as np
 
 from .common import CsvOut, fitted_estimators, run_real
-from repro.core import (MODEL_ZOO, WorkloadSpec, label_scenarios,
-                        scenario_grid)
+from repro.core import (MODEL_ZOO, SweepRunner, WorkloadSpec,
+                        label_scenarios, scenario_grid)
 from repro.core.dataset import TARGET_NAMES, encode_features
 from repro.serving import smape_vec
 
@@ -38,8 +38,11 @@ def main(out: CsvOut, n_scenarios: int = 56, n_test: int = 6) -> None:
     est = fitted_estimators()
     scenarios = scenario_grid(limit=n_scenarios + n_test, seed=7)
     train_sc, test_sc = scenarios[:n_scenarios], scenarios[n_scenarios:]
+    # DT labels through the parallel sweep harness (fast twin per point;
+    # per-scenario seeds keep labels identical to the serial path)
     xs, ys, _ = label_scenarios(est, train_sc, max_adapters=96,
-                                horizon=120.0, seed=7)
+                                horizon=120.0, seed=7,
+                                runner=SweepRunner(est))
     # real-engine test labels
     xt, yt = [], []
     for sc in test_sc:

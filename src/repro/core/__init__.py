@@ -1,5 +1,7 @@
 """The paper's primary contribution: Digital Twin + ML placement pipeline."""
 from .digital_twin import DigitalTwin, DTResult, EstimatorExecutor  # noqa
+from .fast_twin import FastEngine, FastTwin  # noqa
+from .sweep import SweepRunner, SweepTask  # noqa
 from .estimators import (FittedEstimators, collect_benchmark,  # noqa
                          collect_memmax, fit_estimators)
 from .forest import (MODEL_ZOO, DecisionTree, LinearRegression,  # noqa

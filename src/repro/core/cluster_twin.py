@@ -30,6 +30,7 @@ from ..serving.rebalance import RebalancePolicy
 from ..serving.request import Request
 from .digital_twin import EstimatorExecutor
 from .estimators import FittedEstimators
+from .fast_twin import FastEngine
 from .workload import WorkloadSpec, resample_requests
 
 
@@ -44,11 +45,17 @@ class ClusterDTResult:
 
 class ClusterDigitalTwin:
     def __init__(self, est: FittedEstimators, mode: str = "mean",
-                 max_running: int = 256):
+                 max_running: int = 256, fast: bool = True):
+        """``fast`` (default) runs every replica on the struct-of-arrays
+        ``repro.core.fast_twin.FastEngine`` — same scheduling semantics
+        and metrics as the object-mode ``ServingEngine`` replicas
+        (``fast=False``, the equivalence oracle), ~10x cheaper, which is
+        what makes joint fleet sweeps affordable as training labels."""
         assert mode in ("full", "mean")
         self.est = est
         self.mode = mode
         self.max_running = max_running
+        self.fast = fast
 
     # ------------------------------------------------------------------ #
     def specs_from_slots(self, slots: Sequence[int],
@@ -81,10 +88,12 @@ class ClusterDigitalTwin:
             # the estimator's G/N term sees the adapters this replica
             # actually serves, not the whole joint pool
             n_rep = max(len({r.adapter for r in part}), 1)
-            engine = ServingEngine(
-                rspec.engine_config(),
-                EstimatorExecutor(self.est, rspec.adapter_slots, n_rep,
-                                  ranks))
+            ex = EstimatorExecutor(self.est, rspec.adapter_slots, n_rep,
+                                   ranks)
+            engine = (FastEngine(rspec.engine_config(), ex,
+                                 track_requests=False)
+                      if self.fast else
+                      ServingEngine(rspec.engine_config(), ex))
             per.append(engine.run(part, horizon=horizon or spec.horizon))
         return ClusterDTResult(
             metrics=ClusterMetrics.aggregate(per),
@@ -134,7 +143,9 @@ class ClusterDigitalTwin:
         executors = [EstimatorExecutor(self.est, rspec.adapter_slots,
                                        n_share, ranks)
                      for rspec in router.specs]
-        cluster = ServingCluster(router, executors)
+        cluster = ServingCluster(
+            router, executors,
+            engine_factory=FastEngine if self.fast else None)
         if rebalancer is None and rebalance:
             rebalancer = self.rebalancer(spec, router)
         report = cluster.run_online(

@@ -74,19 +74,32 @@ def scenario_grid(rate_set: Sequence[float] = PAPER_RATES,
 
 def label_scenarios(est: FittedEstimators, scenarios: Sequence[Scenario],
                     max_adapters: int = 96, horizon: float = 200.0,
-                    seed: int = 0, verbose: bool = False
+                    seed: int = 0, verbose: bool = False, runner=None
                     ) -> Tuple[np.ndarray, np.ndarray, List[PlacementResult]]:
-    xs, ys, results = [], [], []
-    for i, sc in enumerate(scenarios):
+    """Label scenarios with twin placement sweeps.  ``runner`` (a
+    ``repro.core.sweep.SweepRunner``) distributes scenarios across a
+    process pool; per-scenario seeds keep the labels identical to the
+    serial path for any pool size."""
+    if runner is not None:
+        from .sweep import SweepTask
+        tasks = [SweepTask(pool=tuple(sc.pool(max_adapters)),
+                           dataset=sc.dataset, horizon=horizon,
+                           seed=seed + i)
+                 for i, sc in enumerate(scenarios)]
+        results = runner.map(tasks)
+    else:
+        results = [find_optimal_placement(est, sc.pool(max_adapters),
+                                          sc.dataset, horizon=horizon,
+                                          seed=seed + i)
+                   for i, sc in enumerate(scenarios)]
+    xs, ys = [], []
+    for i, (sc, res) in enumerate(zip(scenarios, results)):
         pool = sc.pool(max_adapters)
-        res = find_optimal_placement(est, pool, sc.dataset,
-                                     horizon=horizon, seed=seed + i)
         spec = WorkloadSpec(adapters=pool, dataset=sc.dataset)
         feats = encode_features([a.rate for a in pool],
                                 [a.rank for a in pool], spec.length_stats())
         xs.append(feats)
         ys.append([res.throughput, res.n_adapters, res.slots])
-        results.append(res)
         if verbose and (i + 1) % 10 == 0:
             print(f"  labelled {i + 1}/{len(scenarios)}")
     return np.asarray(xs), np.asarray(ys), results

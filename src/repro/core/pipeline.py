@@ -57,9 +57,11 @@ def build_pipeline(
         scenarios: Optional[List[Scenario]] = None,
         n_scenarios: int = 40, max_adapters: int = 96,
         horizon: float = 150.0, model_name: str = "forest",
-        seed: int = 0, verbose: bool = False) -> PlacementPipeline:
+        seed: int = 0, verbose: bool = False,
+        n_workers: int = 0) -> PlacementPipeline:
     """Creation phase end-to-end (sizes default to test-scale; the Table-I
-    benchmark scales them up)."""
+    benchmark scales them up).  ``n_workers > 1`` fans the DT scenario
+    sweeps across a ``SweepRunner`` process pool (identical labels)."""
     profile = profile or HardwareProfile()
     ranks = {i: (8, 16, 32)[i % 3] for i in range(n_adapters_for_bench)}
     executor = SyntheticExecutor(profile, ranks, slots=slots_for_bench,
@@ -71,8 +73,13 @@ def build_pipeline(
                          n_adapters_for_bench)
 
     scenarios = scenarios or scenario_grid(limit=n_scenarios, seed=seed)
+    runner = None
+    if n_workers > 1:
+        from .sweep import SweepRunner
+        runner = SweepRunner(est, n_workers=n_workers)
     xs, ys, _ = label_scenarios(est, scenarios, max_adapters=max_adapters,
-                                horizon=horizon, seed=seed, verbose=verbose)
+                                horizon=horizon, seed=seed, verbose=verbose,
+                                runner=runner)
 
     model = MODEL_ZOO[model_name]()
     n_train = max(int(0.8 * len(xs)), 1)

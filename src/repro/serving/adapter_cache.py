@@ -35,14 +35,18 @@ class AdapterSlotCache:
         return uid in self.loaded
 
     def can_load(self, uid: int) -> bool:
+        # pinned adapters are always loaded (pin follows load; a pinned
+        # adapter is unevictable), so "some loaded adapter is unpinned"
+        # reduces to an O(1) size comparison — this predicate runs once
+        # per waiting request per step, the engine's hottest path.
         if uid in self.loaded:
             return True
         if self.dynamic:
             return self._reserve is None or self._reserve(uid, dry=True) \
-                or any(self.pinned.get(a, 0) == 0 for a in self.loaded)
+                or len(self.pinned) < len(self.loaded)
         if len(self.loaded) < self.slots:
             return True
-        return any(self.pinned.get(a, 0) == 0 for a in self.loaded)
+        return len(self.pinned) < len(self.loaded)
 
     def evict(self, uid: int) -> bool:
         """Evict a specific adapter (migration source side).  Refuses when

@@ -427,13 +427,19 @@ class ServingCluster:
     adapters as traffic drifts.
     """
 
-    def __init__(self, router: ClusterRouter, executors: Sequence):
+    def __init__(self, router: ClusterRouter, executors: Sequence,
+                 engine_factory=None):
+        """``engine_factory(cfg, executor)`` builds one replica engine;
+        defaults to ``ServingEngine``.  The ``ClusterDigitalTwin`` passes
+        ``repro.core.fast_twin.FastEngine`` here so offline fleet sweeps
+        run on the struct-of-arrays fast path."""
         if len(executors) != router.n_replicas:
             raise ValueError(
                 f"{router.n_replicas} replicas but {len(executors)} "
                 "executors")
+        factory = engine_factory or ServingEngine
         self.router = router
-        self.engines = [ServingEngine(spec.engine_config(), ex)
+        self.engines = [factory(spec.engine_config(), ex)
                         for spec, ex in zip(router.specs, executors)]
 
     def run(self, requests: Sequence[Request],

@@ -158,7 +158,9 @@ class ServingEngine:
                 self.trace.append(StepTrace(
                     t, len(plan.running), self.scheduler.n_waiting,
                     self.kv.used_fraction, timing.total))
-            for req in list(plan.running):
+            # plan.running is already a snapshot; finish() mutates only the
+            # scheduler's own list, so no per-step defensive copy is needed
+            for req in plan.running:
                 req.generated += 1
                 req.token_times.append(t)
                 if req.first_token_at is None:
@@ -192,8 +194,7 @@ class ServingEngine:
         for req in list(self.scheduler.running):
             self.kv.free(req.uid)
             self.adapters.unpin(req.adapter)
-        self.scheduler.running.clear()
-        self.scheduler.waiting.clear()
+        self.scheduler.clear()
         self._pending = []
         self._next = 0
         dead_uids = {r.uid for r in orphans}

@@ -41,13 +41,34 @@ class Scheduler:
         self.max_running = max_running
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []
+        self._pos: dict = {}               # request uid -> index in running
 
     # ------------------------------------------------------------------ #
     def add(self, reqs: List[Request]) -> None:
         self.waiting.extend(reqs)
 
+    def _append_running(self, req: Request) -> None:
+        self._pos[req.uid] = len(self.running)
+        self.running.append(req)
+
+    def _remove_running(self, req: Request) -> None:
+        """O(1) swap-remove via the uid->index map.  ``list.remove`` on a
+        dataclass list is an O(n) field-by-field equality scan — this is
+        the engine step's (and the Digital Twin's) hottest removal."""
+        i = self._pos.pop(req.uid)
+        last = self.running.pop()
+        if i < len(self.running):
+            self.running[i] = last
+            self._pos[last.uid] = i
+
+    def clear(self) -> None:
+        """Drop every queued/running request (fault-tolerance drain)."""
+        self.running.clear()
+        self._pos.clear()
+        self.waiting.clear()
+
     def finish(self, req: Request) -> None:
-        self.running.remove(req)
+        self._remove_running(req)
         self.kv.free(req.uid)
         self.adapters.unpin(req.adapter)
 
@@ -56,7 +77,7 @@ class Scheduler:
         if not self.running:
             return None
         victim = max(self.running, key=lambda r: r.arrival)
-        self.running.remove(victim)
+        self._remove_running(victim)
         self.kv.free(victim.uid)
         self.adapters.unpin(victim.adapter)
         victim.n_preemptions += 1
@@ -113,7 +134,7 @@ class Scheduler:
             self.adapters.pin(req.adapter)
             self.kv.allocate(req.uid, req.context_len + 1)
             req.admitted_at = now
-            self.running.append(req)
+            self._append_running(req)
             admitted.append(req)
         # skipped requests rejoin the queue in FCFS order
         for req in reversed(skipped):
