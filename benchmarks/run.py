@@ -30,6 +30,7 @@ BENCHES = (
     "fig9_scale_384",
     "fig_cluster_scaling",
     "fig_rebalancing",
+    "fig_sched_policies",
     "fig_twin_speed",
     "table1_dt_accuracy",
     "table1_placement_model",
@@ -43,6 +44,7 @@ SMOKE_BENCHES = (
     "fig4_loading",
     "fig_cluster_scaling",
     "fig_rebalancing",
+    "fig_sched_policies",
     "fig_twin_speed",
 )
 

@@ -5,12 +5,16 @@
   (+ extracted decision rules).
 
     PYTHONPATH=src python examples/placement_pipeline.py
+
+``REPRO_BENCH_SMOKE=1`` shrinks the sweep to CI-gate sizes.
 """
+import os
 import sys
 import time
 
 sys.path.insert(0, "src")
 
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
 
 from repro.core import build_pipeline  # noqa: E402
 from repro.core.dataset import FEATURE_NAMES, TARGET_NAMES  # noqa: E402
@@ -20,8 +24,13 @@ from repro.core.forest import DecisionTree  # noqa: E402
 def main():
     t0 = time.time()
     print("creation phase: benchmarking + fitting + DT sweep + training...")
-    pipe = build_pipeline(n_scenarios=24, max_adapters=96, horizon=120.0,
-                          model_name="forest", verbose=True)
+    if SMOKE:
+        pipe = build_pipeline(n_scenarios=8, max_adapters=48, horizon=40.0,
+                              model_name="forest", verbose=True)
+    else:
+        pipe = build_pipeline(n_scenarios=24, max_adapters=96,
+                              horizon=120.0, model_name="forest",
+                              verbose=True)
     print(f"  built in {time.time() - t0:.1f}s; "
           f"held-out SMAPE: {pipe.fit_report}")
 
@@ -41,8 +50,11 @@ def main():
     print("\ninterpretability: a depth-3 tree distilled from the labels")
     # refit a tiny tree purely for rule extraction
     from repro.core.dataset import label_scenarios, scenario_grid
-    xs, ys, _ = label_scenarios(pipe.est, scenario_grid(limit=12, seed=3),
-                                max_adapters=64, horizon=80.0)
+    xs, ys, _ = label_scenarios(pipe.est,
+                                scenario_grid(limit=6 if SMOKE else 12,
+                                              seed=3),
+                                max_adapters=32 if SMOKE else 64,
+                                horizon=30.0 if SMOKE else 80.0)
     tree = DecisionTree(max_depth=3).fit(xs, ys)
     for rule in tree.rules(FEATURE_NAMES, TARGET_NAMES)[:6]:
         print("   ", rule)

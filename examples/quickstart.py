@@ -3,10 +3,15 @@ requests through the real JAX engine, then ask the Digital Twin to
 replicate the run.
 
     PYTHONPATH=src python examples/quickstart.py
+
+``REPRO_BENCH_SMOKE=1`` shrinks horizons to CI-gate sizes.
 """
+import os
 import sys
 
 sys.path.insert(0, "src")
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
 
 import jax  # noqa: E402
 
@@ -28,11 +33,12 @@ def main():
     lora = model.init_lora(key, n_adapters=4, rank=8)
     executor = JaxExecutor(model, params, lora, max_batch=8, cache_len=256)
 
+    horizon = 4.0 if SMOKE else 10.0
     pool = make_adapter_pool(8, ranks=[8], rates=[0.8])
-    spec = WorkloadSpec(adapters=pool, dataset="small", horizon=10.0)
+    spec = WorkloadSpec(adapters=pool, dataset="small", horizon=horizon)
     engine = ServingEngine(
         EngineConfig(kv_capacity_tokens=4096, adapter_slots=4), executor)
-    m = engine.run(generate_requests(spec), horizon=10.0)
+    m = engine.run(generate_requests(spec), horizon=horizon)
     print(f"[engine/jax] {m.n_finished} finished, "
           f"throughput={m.throughput:.1f} tok/s, itl={m.itl * 1e3:.1f} ms, "
           f"ttft={m.ttft * 1e3:.1f} ms, loads={m.n_loads}")
@@ -45,12 +51,13 @@ def main():
     ex = SyntheticExecutor(profile, ranks, slots=slots, n_adapters=n)
     est = fit_estimators(collect_benchmark(ex, slots, n, ranks),
                          collect_memmax(profile), slots, n)
-    spec = WorkloadSpec(adapters=pool, dataset="sharegpt", horizon=120.0)
+    horizon = 40.0 if SMOKE else 120.0
+    spec = WorkloadSpec(adapters=pool, dataset="sharegpt", horizon=horizon)
     real = ServingEngine(
         EngineConfig(kv_capacity_tokens=profile.kv_capacity(slots, 18.7),
                      adapter_slots=slots),
         SyntheticExecutor(profile, ranks, slots=slots, n_adapters=n, seed=1)
-    ).run(generate_requests(spec), horizon=120.0)
+    ).run(generate_requests(spec), horizon=horizon)
     sim = DigitalTwin(est, mode="full").simulate(
         spec, slots=slots, requests=generate_requests(spec)).metrics
     print(f"[real]  throughput={real.throughput:.1f} tok/s")

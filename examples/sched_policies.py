@@ -1,0 +1,68 @@
+"""Scheduling-policy comparison through the Digital Twin's fast path.
+
+Fits the Eq. (1) estimators from synthetic-engine probes, then serves
+the *same* rotating-hot-phase skewed workload once per registered
+scheduling policy (``repro.serving.policy``) and prints the
+throughput-vs-starvation frontier — the trade each policy makes when a
+few adapters go hot and slots are scarce.
+
+    PYTHONPATH=src python examples/sched_policies.py
+"""
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import (FastTwin, WorkloadSpec, collect_benchmark,  # noqa
+                        collect_memmax, fit_estimators,
+                        generate_drifting_requests, make_adapter_pool,
+                        rotating_hot_phases)
+from repro.serving import (SCHED_POLICIES, HardwareProfile,  # noqa
+                           SyntheticExecutor)
+
+
+def main():
+    smoke = os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+    horizon = 60.0 if smoke else 90.0
+    n_adapters, slots = 24, 3
+
+    # creation phase: probe the synthetic engine, fit the estimators
+    profile = HardwareProfile()
+    ranks = {i: (8, 16)[i % 2] for i in range(n_adapters)}
+    ex = SyntheticExecutor(profile, ranks, slots=8, n_adapters=n_adapters,
+                           seed=0)
+    est = fit_estimators(collect_benchmark(ex, 8, n_adapters, ranks),
+                         collect_memmax(profile), 8, n_adapters)
+
+    # a skewed drifting workload: 20% of adapters are hot, and the hot
+    # set rotates mid-run — with 3 slots, admission order decides which
+    # adapters ever get one
+    pool = make_adapter_pool(n_adapters, [8, 16], [0.05])
+    phases = rotating_hot_phases(pool, horizon, n_phases=2,
+                                 hot_fraction=0.2, hot_rate=1.8,
+                                 cold_rate=0.05)
+    reqs = generate_drifting_requests(pool, "medium", horizon, phases,
+                                      seed=3)
+    spec = WorkloadSpec(adapters=pool, dataset="medium", horizon=horizon,
+                        seed=3)
+
+    print(f"{'policy':<16} {'thpt tok/s':>10} {'starved':>8} "
+          f"{'finished':>8} {'ttft p50':>9} {'ttft p99':>9}")
+    results = {}
+    for policy in sorted(SCHED_POLICIES):
+        twin = FastTwin(est, mode="full", max_running=32,
+                        sched_policy=policy)
+        m = twin.simulate(spec, slots=slots, requests=reqs).metrics
+        results[policy] = m
+        print(f"{policy:<16} {m.throughput:>10.0f} "
+              f"{m.n_starved_requests:>8d} {m.n_finished:>8d} "
+              f"{m.ttft_p50:>8.1f}s {m.ttft_p99:>8.1f}s")
+
+    fair, fcfs = results["adapter-fair"], results["fcfs"]
+    print(f"\nadapter-fair starves {fcfs.n_starved_requests - fair.n_starved_requests} "
+          f"fewer requests than fcfs on this skewed point "
+          f"({fair.n_starved_requests} vs {fcfs.n_starved_requests}).")
+
+
+if __name__ == "__main__":
+    main()

@@ -59,13 +59,15 @@ class ClusterDigitalTwin:
 
     # ------------------------------------------------------------------ #
     def specs_from_slots(self, slots: Sequence[int],
-                         mean_rank: float = 8.0) -> List[ReplicaSpec]:
+                         mean_rank: float = 8.0,
+                         sched_policy: str = "fcfs") -> List[ReplicaSpec]:
         """Build replica specs whose KV capacity comes from the fitted
         Mem_max estimator — the DT analogue of probing each node."""
         return [ReplicaSpec(
             adapter_slots=g,
             kv_capacity_tokens=self.est.kv_capacity(g, mean_rank),
-            max_running=self.max_running) for g in slots]
+            max_running=self.max_running,
+            sched_policy=sched_policy) for g in slots]
 
     # ------------------------------------------------------------------ #
     def simulate(self, spec: WorkloadSpec, router: ClusterRouter,

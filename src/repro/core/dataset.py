@@ -14,6 +14,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..serving.policy import sched_policy_index
 from ..serving.request import Adapter
 from .estimators import FittedEstimators
 from .placement import PlacementResult, find_optimal_placement
@@ -27,12 +28,14 @@ FEATURE_NAMES = (
     "rate_max", "rate_min", "rate_mean", "rate_std",
     "rank_max", "rank_min", "rank_mean", "rank_std",
     "in_mean", "in_std", "out_mean", "out_std",
+    "sched_policy",
 )
 TARGET_NAMES = ("throughput", "served_adapters", "adapter_slots")
 
 
 def encode_features(rates: Sequence[float], ranks: Sequence[int],
-                    stats: Dict[str, float]) -> np.ndarray:
+                    stats: Dict[str, float],
+                    sched_policy: str = "fcfs") -> np.ndarray:
     r = np.asarray(rates, float)
     k = np.asarray(ranks, float)
     return np.array([
@@ -40,6 +43,7 @@ def encode_features(rates: Sequence[float], ranks: Sequence[int],
         k.max(), k.min(), k.mean(), k.std(),
         stats["in_mean"], stats["in_std"],
         stats["out_mean"], stats["out_std"],
+        float(sched_policy_index(sched_policy)),
     ])
 
 
@@ -48,6 +52,7 @@ class Scenario:
     rates: Tuple[float, ...]
     ranks: Tuple[int, ...]
     dataset: str
+    sched_policy: str = "fcfs"
 
     def pool(self, max_adapters: int) -> List[Adapter]:
         return make_adapter_pool(max_adapters, self.ranks, self.rates)
@@ -58,13 +63,19 @@ def scenario_grid(rate_set: Sequence[float] = PAPER_RATES,
                   datasets: Sequence[str] = ("medium",),
                   n_rates: int = 3,
                   limit: Optional[int] = None,
-                  seed: int = 0) -> List[Scenario]:
+                  seed: int = 0,
+                  sched_policies: Sequence[str] = ("fcfs",)
+                  ) -> List[Scenario]:
+    """Scenario grid; ``sched_policies`` adds the scheduling-policy
+    dimension (the default keeps the paper's FCFS-only grid)."""
     combos = list(itertools.combinations_with_replacement(rate_set, n_rates))
     out = []
     for rates in combos:
         for ds in datasets:
-            out.append(Scenario(rates=tuple(rates), ranks=tuple(rank_set),
-                                dataset=ds))
+            for sp in sched_policies:
+                out.append(Scenario(rates=tuple(rates),
+                                    ranks=tuple(rank_set),
+                                    dataset=ds, sched_policy=sp))
     rng = np.random.default_rng(seed)
     rng.shuffle(out)
     if limit:
@@ -84,20 +95,22 @@ def label_scenarios(est: FittedEstimators, scenarios: Sequence[Scenario],
         from .sweep import SweepTask
         tasks = [SweepTask(pool=tuple(sc.pool(max_adapters)),
                            dataset=sc.dataset, horizon=horizon,
-                           seed=seed + i)
+                           seed=seed + i, sched_policy=sc.sched_policy)
                  for i, sc in enumerate(scenarios)]
         results = runner.map(tasks)
     else:
         results = [find_optimal_placement(est, sc.pool(max_adapters),
                                           sc.dataset, horizon=horizon,
-                                          seed=seed + i)
+                                          seed=seed + i,
+                                          sched_policy=sc.sched_policy)
                    for i, sc in enumerate(scenarios)]
     xs, ys = [], []
     for i, (sc, res) in enumerate(zip(scenarios, results)):
         pool = sc.pool(max_adapters)
         spec = WorkloadSpec(adapters=pool, dataset=sc.dataset)
         feats = encode_features([a.rate for a in pool],
-                                [a.rank for a in pool], spec.length_stats())
+                                [a.rank for a in pool], spec.length_stats(),
+                                sched_policy=sc.sched_policy)
         xs.append(feats)
         ys.append([res.throughput, res.n_adapters, res.slots])
         if verbose and (i + 1) % 10 == 0:

@@ -52,11 +52,12 @@ class DTResult:
 
 class DigitalTwin:
     def __init__(self, est: FittedEstimators, mode: str = "full",
-                 max_running: int = 256):
+                 max_running: int = 256, sched_policy: str = "fcfs"):
         assert mode in ("full", "mean")
         self.est = est
         self.mode = mode
         self.max_running = max_running
+        self.sched_policy = sched_policy
 
     def simulate(self, spec: WorkloadSpec, slots: int,
                  requests: Optional[List[Request]] = None,
@@ -81,14 +82,15 @@ class DigitalTwin:
             cfg = EngineConfig(
                 kv_capacity_tokens=self.est.kv_capacity(0, mean_rank),
                 adapter_slots=0, max_running=self.max_running,
-                dynamic_slots=True,
+                sched_policy=self.sched_policy, dynamic_slots=True,
                 adapter_kv_tokens={u: max(int(per_rank * r), 1)
                                    for u, r in ranks.items()})
             slots_for_est = n
         else:
             cfg = EngineConfig(
                 kv_capacity_tokens=self.est.kv_capacity(slots, mean_rank),
-                adapter_slots=slots, max_running=self.max_running)
+                adapter_slots=slots, max_running=self.max_running,
+                sched_policy=self.sched_policy)
             slots_for_est = slots
         engine = ServingEngine(cfg, EstimatorExecutor(
             self.est, slots_for_est, n, ranks))

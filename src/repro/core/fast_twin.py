@@ -46,7 +46,9 @@ from typing import Deque, Dict, List, Optional
 import numpy as np
 
 from ..serving.engine import EngineConfig, StepTrace
-from ..serving.metrics import ServingMetrics
+from ..serving.metrics import ServingMetrics, ttft_percentiles
+from ..serving.policy import (SchedView, make_sched_policy,
+                              overrides_on_admit, overrides_victim)
 from ..serving.request import Request
 from .digital_twin import DigitalTwin, DTResult, EstimatorExecutor
 from .estimators import FittedEstimators
@@ -171,6 +173,32 @@ class _FastAdapterCache:
             self.loaded[uid] = now
 
 
+class _RowView(SchedView):
+    """Policy accessors over struct-of-arrays row ids.
+
+    Returns the very same values the object-mode ``_RequestView`` yields
+    for the corresponding ``Request`` (arrivals are float64 both sides),
+    so a policy's ordering decisions are bit-identical across engines.
+    """
+
+    __slots__ = ("_eng",)
+
+    def __init__(self, eng: "FastEngine"):
+        self._eng = eng
+
+    def arrival(self, i: int) -> float:
+        return float(self._eng._arrival[i])
+
+    def adapter(self, i: int) -> int:
+        return self._eng._ads[i]
+
+    def context_len(self, i: int) -> int:
+        return self._eng._prompts[i] + int(self._eng._generated[i])
+
+    def resident(self, adapter: int) -> bool:
+        return adapter in self._eng._adapters.loaded
+
+
 class _SchedCounts:
     """Duck-typed stand-in for ``engine.scheduler`` queue-depth reads."""
 
@@ -231,12 +259,20 @@ class FastEngine:
         self._max_running = cfg.max_running
         self.trace: List[StepTrace] = []
         self._sched_view = _SchedCounts(self)
+        self._policy_view = _RowView(self)
         self.reset_stream()
 
     # ------------------------------------------------------------------ #
     # stream state
     # ------------------------------------------------------------------ #
     def reset_stream(self) -> None:
+        # fresh policy per stream; a passed-through instance is reset
+        # instead (mirrors ServingEngine.reset_stream -> policy.reset)
+        self._policy = make_sched_policy(self.cfg.sched_policy)
+        self._policy.reset()
+        self._policy_is_fcfs = self._policy.name == "fcfs"
+        self._admit_hook = overrides_on_admit(self._policy)
+        self._victim_hook = overrides_victim(self._policy)
         self.clock = 0.0
         self.halted = False
         self._iters = 0
@@ -397,7 +433,15 @@ class FastEngine:
         if not n:
             return None
         run = self._run[:n]
-        victim = int(run[np.argmax(self._arrival[run])])
+        if self._victim_hook:
+            # policy-chosen victim; running order matches the object
+            # scheduler's list, so a custom rule sees identical input
+            victim = self._policy.victim([int(x) for x in run],
+                                         self._policy_view)
+            if victim is None:
+                return None
+        else:
+            victim = int(run[np.argmax(self._arrival[run])])
         self._remove_running(victim)
         self._kv_free(victim)
         self._adapters.unpin(int(self._adapter[victim]))
@@ -463,10 +507,13 @@ class FastEngine:
                     preempted = self._decode_alloc_slow(
                         [int(x) for x in run])
 
-        # 2. FCFS admissions with loaded-adapter priority.  Fast exit for
-        # the starvation regime: slots exhausted, every resident adapter
-        # pinned, and no waiting request's adapter resident -> the legacy
-        # scan would skip the entire queue and admit nothing.
+        # 2. admissions in the policy's order (FCFS walks the queue as
+        # is), with the shared mechanical rules: loaded-adapter priority
+        # skip, KV head-of-line break, max_running.  Fast exit for the
+        # starvation regime: slots exhausted, every resident adapter
+        # pinned, and no waiting request's adapter resident -> no
+        # ordering can admit anything, so the whole scan (and the
+        # policy's sort) is skipped.
         pf = 0
         load_lat = 0.0
         waiting = self.waiting
@@ -476,6 +523,8 @@ class FastEngine:
                 len(loaded) >= cache.slots
                 and len(pinned) >= len(loaded)
                 and self._wait_ads.keys().isdisjoint(loaded)):
+            candidates = waiting if self._policy_is_fcfs else \
+                self._policy.order(waiting, self._policy_view, now)
             just_pre = set(preempted) if preempted else None
             gen = self._generated
             ads = self._ads
@@ -492,7 +541,7 @@ class FastEngine:
             # not per skipped row
             can_new = (len(loaded) < cache.slots
                        or len(pinned) < len(loaded))
-            for i in waiting:
+            for i in candidates:
                 if self._n_run >= max_running:
                     break
                 if just_pre is not None and i in just_pre:
@@ -518,6 +567,8 @@ class FastEngine:
                 if admitted is None:
                     admitted = set()
                 admitted.add(i)
+                if self._admit_hook:
+                    self._policy.on_admit(i, self._policy_view, now)
                 c = wa[a] - 1
                 if c:
                     wa[a] = c
@@ -684,6 +735,12 @@ class FastEngine:
                 / (gen[itl_mask] - 1))
         ttft_mask = acc & ~np.isnan(first)
         ttfts = first[ttft_mask] - arr[ttft_mask]
+        pct = ttft_percentiles(ttfts)
+        starved_rows = np.flatnonzero(arrived & np.isnan(first))
+        starved_per_adapter: Dict[int, int] = {}
+        for i in starved_rows:
+            a = self._ads[i]
+            starved_per_adapter[a] = starved_per_adapter.get(a, 0) + 1
         return ServingMetrics(
             throughput=out_tokens / duration,
             itl=float(np.mean(itls)) if len(itls) else 0.0,
@@ -694,6 +751,10 @@ class FastEngine:
             n_preemptions=int(self._n_pre[:n][acc].sum()),
             max_kv_used=self._max_kv,
             n_loads=self._adapters.load_count,
+            ttft_p50=pct["p50"],
+            ttft_p99=pct["p99"],
+            n_starved_requests=int(len(starved_rows)),
+            starved_per_adapter=starved_per_adapter,
         )
 
     # ------------------------------------------------------------------ #
@@ -757,18 +818,20 @@ class FastTwin:
     """
 
     def __init__(self, est: FittedEstimators, mode: str = "full",
-                 max_running: int = 256):
+                 max_running: int = 256, sched_policy: str = "fcfs"):
         assert mode in ("full", "mean")
         self.est = est
         self.mode = mode
         self.max_running = max_running
+        self.sched_policy = sched_policy
 
     def simulate(self, spec: WorkloadSpec, slots: int,
                  requests: Optional[List[Request]] = None,
                  horizon: Optional[float] = None,
                  dynamic_slots: bool = False) -> DTResult:
         if dynamic_slots:
-            return DigitalTwin(self.est, self.mode, self.max_running) \
+            return DigitalTwin(self.est, self.mode, self.max_running,
+                               sched_policy=self.sched_policy) \
                 .simulate(spec, slots, requests, horizon,
                           dynamic_slots=True)
         t0 = time.perf_counter()
@@ -779,7 +842,8 @@ class FastTwin:
             requests = resample_requests(spec, spec.length_stats())
         cfg = EngineConfig(
             kv_capacity_tokens=self.est.kv_capacity(slots, mean_rank),
-            adapter_slots=slots, max_running=self.max_running)
+            adapter_slots=slots, max_running=self.max_running,
+            sched_policy=self.sched_policy)
         engine = FastEngine(cfg, EstimatorExecutor(self.est, slots, n,
                                                    ranks),
                             track_requests=False)

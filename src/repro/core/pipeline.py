@@ -38,8 +38,10 @@ class PlacementPipeline:
 
     # ------------------------------------------------------------------ #
     def recommend(self, rates: Sequence[float], ranks: Sequence[int],
-                  length_stats: Dict[str, float]) -> Dict[str, float]:
-        x = encode_features(rates, ranks, length_stats)[None]
+                  length_stats: Dict[str, float],
+                  sched_policy: str = "fcfs") -> Dict[str, float]:
+        x = encode_features(rates, ranks, length_stats,
+                            sched_policy=sched_policy)[None]
         t0 = time.perf_counter()
         y = np.asarray(self.model.predict(x))[0]
         dt = time.perf_counter() - t0
@@ -58,10 +60,13 @@ def build_pipeline(
         n_scenarios: int = 40, max_adapters: int = 96,
         horizon: float = 150.0, model_name: str = "forest",
         seed: int = 0, verbose: bool = False,
-        n_workers: int = 0) -> PlacementPipeline:
+        n_workers: int = 0,
+        sched_policies: Sequence[str] = ("fcfs",)) -> PlacementPipeline:
     """Creation phase end-to-end (sizes default to test-scale; the Table-I
     benchmark scales them up).  ``n_workers > 1`` fans the DT scenario
-    sweeps across a ``SweepRunner`` process pool (identical labels)."""
+    sweeps across a ``SweepRunner`` process pool (identical labels).
+    ``sched_policies`` widens the scenario grid with the scheduling-policy
+    axis, so the model can learn e.g. that ``adapter-fair`` shifts N*."""
     profile = profile or HardwareProfile()
     ranks = {i: (8, 16, 32)[i % 3] for i in range(n_adapters_for_bench)}
     executor = SyntheticExecutor(profile, ranks, slots=slots_for_bench,
@@ -72,7 +77,8 @@ def build_pipeline(
     est = fit_estimators(step_rows, mem_rows, slots_for_bench,
                          n_adapters_for_bench)
 
-    scenarios = scenarios or scenario_grid(limit=n_scenarios, seed=seed)
+    scenarios = scenarios or scenario_grid(limit=n_scenarios, seed=seed,
+                                           sched_policies=sched_policies)
     runner = None
     if n_workers > 1:
         from .sweep import SweepRunner

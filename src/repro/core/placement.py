@@ -28,6 +28,7 @@ import numpy as np
 
 from ..serving.cluster import ClusterRouter
 from ..serving.metrics import smape_vec
+from ..serving.policy import sched_policy_index
 from ..serving.request import Adapter
 from .cluster_twin import ClusterDigitalTwin
 from .digital_twin import DigitalTwin
@@ -141,15 +142,15 @@ CLUSTER_FEATURE_NAMES = (
     "rate_max", "rate_min", "rate_mean", "rate_std",
     "rank_max", "rank_min", "rank_mean", "rank_std",
     "in_mean", "in_std", "out_mean", "out_std",
-    "n_replicas", "pool_size", "total_rate",
+    "n_replicas", "pool_size", "total_rate", "sched_policy",
 )
 CLUSTER_TARGET_NAMES = ("total_throughput", "served_adapters",
                         "slots_per_replica")
 
 
 def encode_cluster_features(rates: Sequence[float], ranks: Sequence[int],
-                            stats: Dict[str, float],
-                            n_replicas: int) -> np.ndarray:
+                            stats: Dict[str, float], n_replicas: int,
+                            sched_policy: str = "fcfs") -> np.ndarray:
     r = np.asarray(rates, float)
     k = np.asarray(ranks, float)
     return np.array([
@@ -158,6 +159,7 @@ def encode_cluster_features(rates: Sequence[float], ranks: Sequence[int],
         stats["in_mean"], stats["in_std"],
         stats["out_mean"], stats["out_std"],
         float(n_replicas), float(len(r)), float(r.sum()),
+        float(sched_policy_index(sched_policy)),
     ])
 
 
@@ -166,12 +168,14 @@ def find_cluster_placement_joint(
         n_replicas: int, horizon: float = 150.0, seed: int = 0,
         n_grid: Optional[Sequence[int]] = None,
         slot_grid=default_slot_grid, policy: str = "affinity",
-        early_stop: int = 2, fast: bool = True) -> PlacementResult:
+        early_stop: int = 2, fast: bool = True,
+        sched_policy: str = "fcfs") -> PlacementResult:
     """Sweep (served adapters N, per-replica slots G) through the
     ``ClusterDigitalTwin`` on the *joint* workload — candidate configs
     are scored with the same router the online fleet uses, so the labels
     include routing/affinity effects the per-replica reuse misses.
-    ``fast`` selects the struct-of-arrays replica engines (same labels)."""
+    ``fast`` selects the struct-of-arrays replica engines (same labels);
+    ``sched_policy`` is every replica engine's admission policy."""
     twin = ClusterDigitalTwin(est, mode="mean", fast=fast)
     if n_grid is None:
         n_grid = sorted({max(1, len(pool) // k) for k in
@@ -188,7 +192,8 @@ def find_cluster_placement_joint(
         for g in slot_grid(max(n // n_replicas, 1)):
             router = ClusterRouter(
                 twin.specs_from_slots([g] * n_replicas,
-                                      mean_rank=mean_rank),
+                                      mean_rank=mean_rank,
+                                      sched_policy=sched_policy),
                 policy=policy)
             m = twin.simulate(spec, router).metrics
             pt = PlacementPoint(
@@ -234,13 +239,14 @@ def label_cluster_scenarios(
         from .sweep import SweepTask
         tasks = [SweepTask(pool=tuple(sc.pool(max_adapters)),
                            dataset=sc.dataset, horizon=horizon,
-                           seed=seed + i, n_replicas=n_rep)
+                           seed=seed + i, n_replicas=n_rep,
+                           sched_policy=sc.sched_policy)
                  for i, (sc, n_rep) in enumerate(grid)]
         results = runner.map(tasks)
     else:
         results = [find_cluster_placement_joint(
             est, sc.pool(max_adapters), sc.dataset, n_replicas=n_rep,
-            horizon=horizon, seed=seed + i)
+            horizon=horizon, seed=seed + i, sched_policy=sc.sched_policy)
             for i, (sc, n_rep) in enumerate(grid)]
     for i, ((sc, n_rep), res) in enumerate(zip(grid, results)):
         pool = sc.pool(max_adapters)
@@ -248,7 +254,7 @@ def label_cluster_scenarios(
                              dataset=sc.dataset).length_stats()
         xs.append(encode_cluster_features(
             [a.rate for a in pool], [a.rank for a in pool],
-            stats, n_rep))
+            stats, n_rep, sched_policy=sc.sched_policy))
         ys.append([res.throughput, res.n_adapters, res.slots])
         if verbose and (i + 1) % 10 == 0:
             print(f"  labelled {i + 1} cluster points")
@@ -265,10 +271,11 @@ class ClusterPlacementModel:
     fit_report: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def recommend(self, rates: Sequence[float], ranks: Sequence[int],
-                  length_stats: Dict[str, float],
-                  n_replicas: int) -> Dict[str, float]:
+                  length_stats: Dict[str, float], n_replicas: int,
+                  sched_policy: str = "fcfs") -> Dict[str, float]:
         x = encode_cluster_features(rates, ranks, length_stats,
-                                    n_replicas)[None]
+                                    n_replicas,
+                                    sched_policy=sched_policy)[None]
         y = np.asarray(self.model.predict(x))[0]
         return {
             "total_throughput": float(y[0]),
@@ -311,13 +318,17 @@ def find_optimal_placement(
         horizon: float = 300.0, seed: int = 0,
         n_grid: Optional[Sequence[int]] = None,
         slot_grid=default_slot_grid, dt_mode: str = "mean",
-        early_stop: int = 2, fast: bool = True) -> PlacementResult:
+        early_stop: int = 2, fast: bool = True,
+        sched_policy: str = "fcfs") -> PlacementResult:
     """Sweep served-adapter counts (and slots) through the DT.
 
     ``fast`` (default) runs each point on the struct-of-arrays
     ``FastTwin`` — identical labels to the legacy object-mode twin
-    (``fast=False``, kept as the equivalence oracle), ~10x cheaper."""
-    dt = (FastTwin if fast else DigitalTwin)(est, mode=dt_mode)
+    (``fast=False``, kept as the equivalence oracle), ~10x cheaper.
+    ``sched_policy`` makes the scheduling policy a sweep axis: the same
+    workload can have a different (N*, G*) under e.g. ``adapter-fair``."""
+    dt = (FastTwin if fast else DigitalTwin)(est, mode=dt_mode,
+                                             sched_policy=sched_policy)
     if n_grid is None:
         n_grid = sorted({max(1, len(pool) // k) for k in
                          (16, 8, 4, 3, 2)} | {len(pool)})

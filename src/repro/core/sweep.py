@@ -48,6 +48,7 @@ class SweepTask:
     dt_mode: str = "mean"
     early_stop: int = 2
     policy: str = "affinity"
+    sched_policy: str = "fcfs"
 
 
 def run_task(est: FittedEstimators, task: SweepTask) -> PlacementResult:
@@ -57,11 +58,12 @@ def run_task(est: FittedEstimators, task: SweepTask) -> PlacementResult:
         return find_cluster_placement_joint(
             est, list(task.pool), task.dataset, n_replicas=task.n_replicas,
             horizon=task.horizon, seed=task.seed, n_grid=n_grid,
-            policy=task.policy, early_stop=task.early_stop)
+            policy=task.policy, early_stop=task.early_stop,
+            sched_policy=task.sched_policy)
     return find_optimal_placement(
         est, list(task.pool), task.dataset, horizon=task.horizon,
         seed=task.seed, n_grid=n_grid, dt_mode=task.dt_mode,
-        early_stop=task.early_stop)
+        early_stop=task.early_stop, sched_policy=task.sched_policy)
 
 
 _WORKER_EST: Optional[FittedEstimators] = None

@@ -14,6 +14,7 @@ from ..configs import get_reduced
 from ..core.workload import WorkloadSpec, generate_requests, make_adapter_pool
 from ..models import Model, ShardingPlan
 from ..serving import EngineConfig, JaxExecutor, ServingEngine
+from ..serving.policy import SCHED_POLICIES
 
 
 def main() -> None:
@@ -26,6 +27,9 @@ def main() -> None:
     ap.add_argument("--horizon", type=float, default=30.0)
     ap.add_argument("--dataset", default="small")
     ap.add_argument("--kv-tokens", type=int, default=4096)
+    ap.add_argument("--sched-policy", default="fcfs",
+                    choices=sorted(SCHED_POLICIES),
+                    help="admission/preemption scheduling policy")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
@@ -40,13 +44,22 @@ def main() -> None:
                         horizon=args.horizon)
     reqs = generate_requests(spec)
     engine = ServingEngine(EngineConfig(
-        kv_capacity_tokens=args.kv_tokens, adapter_slots=args.slots),
+        kv_capacity_tokens=args.kv_tokens, adapter_slots=args.slots,
+        sched_policy=args.sched_policy),
         executor)
     m = engine.run(reqs, horizon=args.horizon)
     print(f"served {m.n_finished} requests | throughput={m.throughput:.1f} "
           f"tok/s (ideal {m.ideal_throughput:.1f}) | itl={m.itl * 1e3:.1f}ms "
-          f"| ttft={m.ttft * 1e3:.1f}ms | preemptions={m.n_preemptions} "
-          f"| loads={m.n_loads} | starved={m.starved}")
+          f"| ttft={m.ttft * 1e3:.1f}ms "
+          f"(p50 {m.ttft_p50 * 1e3:.1f} / p99 {m.ttft_p99 * 1e3:.1f}) "
+          f"| preemptions={m.n_preemptions} "
+          f"| loads={m.n_loads} | starved={m.starved} "
+          f"| starved_reqs={m.n_starved_requests}")
+    if m.starved_per_adapter:
+        worst = sorted(m.starved_per_adapter.items(),
+                       key=lambda kv: -kv[1])[:5]
+        print("  starved requests by adapter: "
+              + ", ".join(f"{a}:{c}" for a, c in worst))
 
 
 if __name__ == "__main__":

@@ -26,6 +26,7 @@ from ..serving import (ClusterMetrics, ClusterRouter, FailureEvent,
                        HardwareProfile, RebalancePolicy, ServingCluster,
                        SyntheticExecutor, make_replica_specs)
 from ..serving.cluster import POLICIES
+from ..serving.policy import SCHED_POLICIES
 
 
 def _int_list(text: str, n: int, name: str) -> List[int]:
@@ -55,9 +56,17 @@ def _failures(specs: List[str], n_replicas: int) -> List[FailureEvent]:
 def _report(tag: str, m: ClusterMetrics) -> None:
     print(f"[{tag}] throughput={m.throughput:.1f} tok/s "
           f"(ideal {m.ideal_throughput:.1f}) | itl={m.itl * 1e3:.1f}ms "
-          f"| ttft={m.ttft * 1e3:.1f}ms | finished={m.n_finished} "
+          f"| ttft={m.ttft * 1e3:.1f}ms "
+          f"(p50 {m.ttft_p50 * 1e3:.1f} / p99 {m.ttft_p99 * 1e3:.1f}) "
+          f"| finished={m.n_finished} "
           f"| adapter_loads={m.n_loads} | preemptions={m.n_preemptions} "
-          f"| imbalance={m.imbalance:.2f} | starved={m.starved}")
+          f"| imbalance={m.imbalance:.2f} | starved={m.starved} "
+          f"| starved_reqs={m.n_starved_requests}")
+    if m.starved_per_adapter:
+        worst = sorted(m.starved_per_adapter.items(),
+                       key=lambda kv: -kv[1])[:5]
+        print("  starved requests by adapter: "
+              + ", ".join(f"{a}:{c}" for a, c in worst))
 
 
 def run_once(args, policy: str, verbose: bool = True) -> ClusterMetrics:
@@ -67,7 +76,8 @@ def run_once(args, policy: str, verbose: bool = True) -> ClusterMetrics:
         kvs = _int_list(args.kv_tokens, args.replicas, "kv-tokens")
     else:
         kvs = [profile.kv_capacity(g, args.rank) for g in slots]
-    specs = make_replica_specs(args.replicas, slots, kvs)
+    specs = make_replica_specs(args.replicas, slots, kvs,
+                               sched_policy=args.sched_policy)
 
     pool = make_adapter_pool(args.adapters, [args.rank], [args.rate])
     ranks = {a.uid: a.rank for a in pool}
@@ -117,7 +127,10 @@ def run_once(args, policy: str, verbose: bool = True) -> ClusterMetrics:
                   f"kv={s.kv_capacity_tokens} -> "
                   f"thpt={m.throughput:.1f} tok/s finished={m.n_finished} "
                   f"loads={m.n_loads} starved={m.starved}")
-    _report(policy + ("+online" if online else ""), metrics)
+    tag = policy
+    if args.sched_policy != "fcfs":
+        tag += f"/{args.sched_policy}"
+    _report(tag + ("+online" if online else ""), metrics)
     return metrics
 
 
@@ -134,8 +147,13 @@ def main() -> None:
                     help="per-replica KV capacity override (comma list)")
     ap.add_argument("--policy", default="affinity",
                     choices=sorted(POLICIES))
+    ap.add_argument("--sched-policy", default="fcfs",
+                    choices=sorted(SCHED_POLICIES),
+                    help="per-replica engine admission/preemption policy")
     ap.add_argument("--compare-policies", action="store_true",
                     help="run every routing policy on the same workload")
+    ap.add_argument("--compare-sched-policies", action="store_true",
+                    help="run every scheduling policy on the same workload")
     ap.add_argument("--dataset", default="medium")
     ap.add_argument("--horizon", type=float, default=60.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -162,6 +180,10 @@ def main() -> None:
     if args.compare_policies:
         for policy in sorted(POLICIES):
             run_once(args, policy, verbose=False)
+    elif args.compare_sched_policies:
+        for sched in sorted(SCHED_POLICIES):
+            args.sched_policy = sched
+            run_once(args, args.policy, verbose=False)
     else:
         run_once(args, args.policy)
 

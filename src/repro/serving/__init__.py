@@ -6,6 +6,9 @@ from .kv_cache import PagedKVCache  # noqa
 from .metrics import ServingMetrics, smape, smape_vec, summarize  # noqa
 from .request import Adapter, Request  # noqa
 from .scheduler import Scheduler, StepPlan  # noqa
+from .policy import (SCHED_POLICIES, SchedulingPolicy, SchedView,  # noqa
+                     make_sched_policy, register_sched_policy,
+                     sched_policy_index)
 from .router import PlacementRouter, ReplicaPlan, RouterState  # noqa
 from .cluster import (POLICIES, ClusterMetrics, ClusterRouter,  # noqa
                       FailureEvent, OnlineReport, ReplicaSpec,

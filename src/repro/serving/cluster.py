@@ -54,19 +54,24 @@ class ReplicaSpec:
     kv_capacity_tokens: int
     max_running: int = 256
     block_size: int = 16
+    # admission/preemption policy of this replica's engine
+    # (repro.serving.policy registry)
+    sched_policy: str = "fcfs"
 
     def engine_config(self) -> EngineConfig:
         return EngineConfig(
             kv_capacity_tokens=self.kv_capacity_tokens,
             adapter_slots=self.adapter_slots,
             max_running=self.max_running,
-            block_size=self.block_size)
+            block_size=self.block_size,
+            sched_policy=self.sched_policy)
 
 
 def make_replica_specs(
         n: int, adapter_slots: Union[int, Sequence[int]],
         kv_capacity_tokens: Union[int, Sequence[int]],
-        max_running: int = 256) -> List[ReplicaSpec]:
+        max_running: int = 256,
+        sched_policy: str = "fcfs") -> List[ReplicaSpec]:
     """Uniform or heterogeneous specs from scalars / per-replica lists."""
     def expand(v, name):
         vs = [v] * n if isinstance(v, int) else list(v)
@@ -76,7 +81,7 @@ def make_replica_specs(
     slots = expand(adapter_slots, "adapter_slots")
     kvs = expand(kv_capacity_tokens, "kv_capacity_tokens")
     return [ReplicaSpec(adapter_slots=s, kv_capacity_tokens=k,
-                        max_running=max_running)
+                        max_running=max_running, sched_policy=sched_policy)
             for s, k in zip(slots, kvs)]
 
 
@@ -348,6 +353,13 @@ class ClusterMetrics:
     n_preemptions: int
     max_kv_used: float
     n_loads: int
+    # TTFT tail, aggregated as the finished-weighted mean of per-replica
+    # percentiles (exact pooled percentiles would need the raw samples)
+    ttft_p50: float = 0.0
+    ttft_p99: float = 0.0
+    n_starved_requests: int = 0
+    starved_per_adapter: Dict[int, int] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def starved(self) -> bool:
@@ -376,6 +388,11 @@ class ClusterMetrics:
                 return 0.0
             return sum(v * w for v, w in zip(vals, weights)) / wsum
 
+        starved_per_adapter: Dict[int, int] = {}
+        for m in per:
+            for a, c in m.starved_per_adapter.items():
+                starved_per_adapter[a] = starved_per_adapter.get(a, 0) + c
+
         return cls(
             per_replica=per,
             throughput=out_tokens / duration if duration > 0 else 0.0,
@@ -387,6 +404,10 @@ class ClusterMetrics:
             n_preemptions=sum(m.n_preemptions for m in per),
             max_kv_used=max((m.max_kv_used for m in per), default=0.0),
             n_loads=sum(m.n_loads for m in per),
+            ttft_p50=wmean([m.ttft_p50 for m in per]),
+            ttft_p99=wmean([m.ttft_p99 for m in per]),
+            n_starved_requests=sum(m.n_starved_requests for m in per),
+            starved_per_adapter=starved_per_adapter,
         )
 
 

@@ -38,6 +38,9 @@ class EngineConfig:
     max_running: int = 256
     block_size: int = 16
     max_steps: int = 2_000_000
+    # admission/preemption policy (repro.serving.policy registry); "fcfs"
+    # is the paper's fixed vLLM scheduler and the byte-identical default
+    sched_policy: str = "fcfs"
     # S-LoRA mode (paper §V-B): no fixed slots; adapter weights share the
     # unified paged pool, charged per adapter in KV-token equivalents.
     dynamic_slots: bool = False
@@ -73,7 +76,8 @@ class ServingEngine:
                 0, dynamic=True, reserve=reserve, release=release)
         else:
             self.adapters = AdapterSlotCache(cfg.adapter_slots)
-        self.scheduler = Scheduler(self.kv, self.adapters, cfg.max_running)
+        self.scheduler = Scheduler(self.kv, self.adapters, cfg.max_running,
+                                   policy=cfg.sched_policy)
         self.trace: List[StepTrace] = []
         self.reset_stream()
 
@@ -82,6 +86,7 @@ class ServingEngine:
     # ------------------------------------------------------------------ #
     def reset_stream(self) -> None:
         """Start a fresh request stream (clock back to zero)."""
+        self.scheduler.policy.reset()
         self.clock = 0.0
         self.halted = False
         self._pending: List[Request] = []

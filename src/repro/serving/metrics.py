@@ -1,8 +1,16 @@
-"""Serving metrics: throughput / ITL / TTFT + starvation detection."""
+"""Serving metrics: throughput / ITL / TTFT + starvation detection.
+
+Beyond the paper's aggregate starvation rule (<90% of offered
+throughput), metrics carry the request-level view scheduling policies
+are compared on: per-adapter starved-request counters (a request that
+arrived inside the measured window but never received its first token)
+and the TTFT tail (p50/p99) — a policy can hold aggregate throughput
+while quietly starving one adapter, and these fields expose it.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import Dict, List
 
 import numpy as np
 
@@ -20,6 +28,11 @@ class ServingMetrics:
     n_preemptions: int
     max_kv_used: float = 0.0
     n_loads: int = 0
+    ttft_p50: float = 0.0      # TTFT median (s), 0 when nothing served
+    ttft_p99: float = 0.0      # TTFT 99th percentile (s)
+    n_starved_requests: int = 0  # arrived but never got a first token
+    starved_per_adapter: Dict[int, int] = dataclasses.field(
+        default_factory=dict)  # adapter uid -> starved request count
 
     @property
     def starved(self) -> bool:
@@ -29,6 +42,17 @@ class ServingMetrics:
         return self.throughput < 0.9 * self.ideal_throughput
 
 
+def ttft_percentiles(ttfts) -> Dict[str, float]:
+    """p50/p99 of a TTFT sample (0.0 when empty) — shared by the
+    object-mode ``summarize`` and the fast twin's vectorized finalize so
+    both compute bit-identical values."""
+    if len(ttfts) == 0:
+        return {"p50": 0.0, "p99": 0.0}
+    arr = np.asarray(ttfts, float)
+    return {"p50": float(np.percentile(arr, 50)),
+            "p99": float(np.percentile(arr, 99))}
+
+
 def summarize(reqs: List[Request], duration: float,
               offered_tokens: float, max_kv_used: float = 0.0,
               n_loads: int = 0) -> ServingMetrics:
@@ -36,6 +60,12 @@ def summarize(reqs: List[Request], duration: float,
     out_tokens = sum(r.generated for r in reqs)
     itls = [r.itl for r in finished if r.itl is not None]
     ttfts = [r.ttft for r in reqs if r.ttft is not None]
+    pct = ttft_percentiles(ttfts)
+    starved_per_adapter: Dict[int, int] = {}
+    for r in reqs:
+        if r.arrival <= duration and r.first_token_at is None:
+            starved_per_adapter[r.adapter] = \
+                starved_per_adapter.get(r.adapter, 0) + 1
     return ServingMetrics(
         throughput=out_tokens / duration if duration > 0 else 0.0,
         itl=float(np.mean(itls)) if itls else 0.0,
@@ -46,6 +76,10 @@ def summarize(reqs: List[Request], duration: float,
         n_preemptions=sum(r.n_preemptions for r in reqs),
         max_kv_used=max_kv_used,
         n_loads=n_loads,
+        ttft_p50=pct["p50"],
+        ttft_p99=pct["p99"],
+        n_starved_requests=sum(starved_per_adapter.values()),
+        starved_per_adapter=starved_per_adapter,
     )
 
 

@@ -1,19 +1,26 @@
-"""Continuous-batching scheduler: FCFS + vLLM adapter-slot priority,
-greedy KV allocation with preemption-by-recompute.
+"""Continuous-batching scheduler: greedy KV allocation with
+preemption-by-recompute, admission order delegated to a pluggable
+``SchedulingPolicy`` (default ``fcfs`` = FCFS + vLLM adapter-slot
+priority, the paper's fixed scheduler).
 
 This class is shared verbatim by the real engine and the Digital Twin —
 the paper's DT replicates scheduling *logic* exactly (Fig. 8: "As vLLM, we
 use a FCFS policy and a greedy allocation of KV cache"); only step *times*
-and memory *capacity* differ (measured vs estimated).
+and memory *capacity* differ (measured vs estimated).  The policy seam
+(``repro.serving.policy``) keeps that replication intact: the same policy
+instance drives identical decisions here and in the struct-of-arrays
+``FastEngine``.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional, Set
+from typing import Deque, List, Optional, Set, Union
 
 from .adapter_cache import AdapterSlotCache
 from .kv_cache import PagedKVCache
+from .policy import (SchedulingPolicy, SchedView, make_sched_policy,
+                     overrides_victim)
 from .request import Request
 
 
@@ -33,12 +40,37 @@ class StepPlan:
         return sum(r.context_len for r in self.admitted)
 
 
+class _RequestView(SchedView):
+    """Policy accessors over ``Request`` objects."""
+
+    __slots__ = ("_adapters",)
+
+    def __init__(self, adapters: AdapterSlotCache):
+        self._adapters = adapters
+
+    def arrival(self, req: Request) -> float:
+        return req.arrival
+
+    def adapter(self, req: Request) -> int:
+        return req.adapter
+
+    def context_len(self, req: Request) -> int:
+        return req.context_len
+
+    def resident(self, adapter: int) -> bool:
+        return self._adapters.is_loaded(adapter)
+
+
 class Scheduler:
     def __init__(self, kv: PagedKVCache, adapters: AdapterSlotCache,
-                 max_running: int = 256):
+                 max_running: int = 256,
+                 policy: Union[str, SchedulingPolicy] = "fcfs"):
         self.kv = kv
         self.adapters = adapters
         self.max_running = max_running
+        self.policy = make_sched_policy(policy)
+        self._view = _RequestView(adapters)
+        self._custom_victim = overrides_victim(self.policy)
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []
         self._pos: dict = {}               # request uid -> index in running
@@ -66,6 +98,7 @@ class Scheduler:
         self.running.clear()
         self._pos.clear()
         self.waiting.clear()
+        self.policy.reset()
 
     def finish(self, req: Request) -> None:
         self._remove_running(req)
@@ -73,10 +106,16 @@ class Scheduler:
         self.adapters.unpin(req.adapter)
 
     def _preempt_one(self) -> Optional[Request]:
-        """Evict the most recently arrived running request (recompute)."""
+        """Evict one running request (recompute).  Default rule — the
+        most recently arrived — unless the policy overrides ``victim``."""
         if not self.running:
             return None
-        victim = max(self.running, key=lambda r: r.arrival)
+        if self._custom_victim:
+            victim = self.policy.victim(self.running, self._view)
+            if victim is None:
+                return None
+        else:
+            victim = max(self.running, key=lambda r: r.arrival)
         self._remove_running(victim)
         self.kv.free(victim.uid)
         self.adapters.unpin(victim.adapter)
@@ -91,7 +130,8 @@ class Scheduler:
         cold_loads: List[int] = []
 
         # 1. greedy decode allocation for already-running requests;
-        #    preempt (newest first) on memory exhaustion.
+        #    preempt (policy victim, default newest-first) on memory
+        #    exhaustion.
         for req in list(self.running):
             while not self.kv.allocate(req.uid, 1):
                 # S-LoRA: idle adapter weights are evicted from the unified
@@ -106,29 +146,46 @@ class Scheduler:
                 if victim is req:
                     break  # req preempted itself; it no longer decodes
 
-        # 2. admissions: FCFS, but when its adapter cannot get a slot,
-        #    skip and let later requests with loaded adapters through
-        #    (vLLM's loaded-adapter priority).  Requests preempted in THIS
-        #    step stay queued until the next step (no same-step thrash).
+        # 2. admissions, in the policy's order.  The mechanical rules are
+        #    policy-independent: a request whose adapter cannot get a slot
+        #    is skipped (vLLM's loaded-adapter priority — later requests
+        #    with loaded adapters pass it), KV exhaustion stops the scan
+        #    (head-of-line blocking), and requests preempted in THIS step
+        #    stay queued until the next step (no same-step thrash).
+        #    Skipped requests keep their place: the waiting queue itself
+        #    is never reordered, only the per-step attempt order is.
         just_preempted = {r.uid for r in preempted}
-        skipped: List[Request] = []
-        while self.waiting and len(self.running) < self.max_running:
-            req = self.waiting[0]
-            if req.uid in just_preempted:
-                self.waiting.popleft()
-                skipped.append(req)
-                continue
-            need_slots = not self.adapters.is_loaded(req.adapter)
-            if need_slots and not self.adapters.can_load(req.adapter):
-                self.waiting.popleft()
-                skipped.append(req)
-                continue
-            if not self.kv.can_allocate(req.context_len + 1):
-                if self.adapters.dynamic and \
-                        self.adapters.evict_idle_lru() is not None:
-                    continue
+        admitted_uids: Set[int] = set()
+        # no admission is possible when the batch is full — skip the
+        # policy's ordering work entirely (mirrors the fast path's guard)
+        candidates = self.waiting if self.waiting and \
+            len(self.running) < self.max_running else ()
+        if candidates and self.policy.name != "fcfs":
+            candidates = self.policy.order(candidates, self._view, now)
+        for req in candidates:
+            if len(self.running) >= self.max_running:
                 break
-            self.waiting.popleft()
+            if req.uid in just_preempted:
+                continue
+            # dynamic (S-LoRA) mode may evict idle adapter weights from the
+            # unified pool to make room; every eviction re-runs the full
+            # eligibility check (the evicted adapter can be this request's)
+            verdict = "admit"
+            while True:
+                need_slots = not self.adapters.is_loaded(req.adapter)
+                if need_slots and not self.adapters.can_load(req.adapter):
+                    verdict = "skip"
+                    break
+                if not self.kv.can_allocate(req.context_len + 1):
+                    if self.adapters.dynamic and \
+                            self.adapters.evict_idle_lru() is not None:
+                        continue
+                    verdict = "stop"
+                break
+            if verdict == "skip":
+                continue
+            if verdict == "stop":
+                break
             if self.adapters.load(req.adapter, now):
                 cold_loads.append(req.adapter)
             self.adapters.pin(req.adapter)
@@ -136,9 +193,12 @@ class Scheduler:
             req.admitted_at = now
             self._append_running(req)
             admitted.append(req)
-        # skipped requests rejoin the queue in FCFS order
-        for req in reversed(skipped):
-            self.waiting.appendleft(req)
+            admitted_uids.add(req.uid)
+            self.policy.on_admit(req, self._view, now)
+        if admitted_uids:
+            # remaining requests keep FCFS (arrival) queue order
+            self.waiting = deque(r for r in self.waiting
+                                 if r.uid not in admitted_uids)
 
         for req in self.running:
             self.adapters.touch(req.adapter, now)

@@ -20,10 +20,12 @@ from repro.core import (ClusterDigitalTwin, DigitalTwin, FastTwin, Scenario,
                         rotating_hot_phases)
 from repro.core.estimators import FittedEstimators
 from repro.core.sweep import run_task
-from repro.serving import ClusterRouter, FailureEvent
+from repro.serving import SCHED_POLICIES, ClusterRouter, FailureEvent
 
 EXACT_FIELDS = ("throughput", "ideal_throughput", "duration", "n_finished",
-                "n_preemptions", "n_loads", "max_kv_used", "ttft")
+                "n_preemptions", "n_loads", "max_kv_used", "ttft",
+                "ttft_p50", "ttft_p99", "n_starved_requests",
+                "starved_per_adapter")
 
 
 def mk_est(kv_base: float = 120000.0, kv_slope: float = -60.0
@@ -47,11 +49,12 @@ def assert_equivalent(legacy, fast):
     assert fast.itl == pytest.approx(legacy.itl, rel=1e-9, abs=1e-12)
 
 
-def both(est, spec, slots, mode="mean", requests=None):
-    legacy = DigitalTwin(est, mode=mode).simulate(
-        spec, slots=slots, requests=requests).metrics
-    fast = FastTwin(est, mode=mode).simulate(
-        spec, slots=slots, requests=requests).metrics
+def both(est, spec, slots, mode="mean", requests=None,
+         sched_policy="fcfs"):
+    legacy = DigitalTwin(est, mode=mode, sched_policy=sched_policy) \
+        .simulate(spec, slots=slots, requests=requests).metrics
+    fast = FastTwin(est, mode=mode, sched_policy=sched_policy) \
+        .simulate(spec, slots=slots, requests=requests).metrics
     return legacy, fast
 
 
@@ -123,6 +126,51 @@ def test_equivalence_preemption_path():
     legacy, fast = both(est, spec, slots=6)
     assert legacy.n_preemptions > 0     # the path under test was hit
     assert_equivalent(legacy, fast)
+
+
+# --------------------------------------------------------------------- #
+# per-policy equivalence: every registered scheduling policy must make
+# identical decisions in the object-mode twin and the SoA fast path
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("policy", sorted(SCHED_POLICIES))
+def test_equivalence_per_sched_policy(policy):
+    """Slot-pressure + skew so the admission *ordering* actually binds."""
+    est = mk_est()
+    pool = make_adapter_pool(24, [8, 16, 32], [1.2, 0.3, 0.08, 0.02])
+    spec = WorkloadSpec(adapters=pool, dataset="sharegpt", horizon=70.0,
+                        seed=13)
+    reqs = generate_requests(spec)
+    legacy, fast = both(est, spec, slots=4, mode="full", requests=reqs,
+                        sched_policy=policy)
+    assert legacy.n_finished > 0
+    assert_equivalent(legacy, fast)
+
+
+@pytest.mark.parametrize("policy", sorted(SCHED_POLICIES))
+def test_equivalence_per_sched_policy_preemption(policy):
+    """Same, with KV tight enough to hit the preemption fallback."""
+    est = mk_est(kv_base=5000.0, kv_slope=-5.0)
+    pool = make_adapter_pool(12, [8, 16], [0.5, 0.3])
+    spec = WorkloadSpec(adapters=pool, dataset="sharegpt", horizon=60.0,
+                        seed=5)
+    legacy, fast = both(est, spec, slots=6, sched_policy=policy)
+    assert legacy.n_preemptions > 0
+    assert_equivalent(legacy, fast)
+
+
+def test_placement_policy_axis_fast_matches_legacy():
+    """The sweep's policy dimension labels identically on both twins."""
+    est = mk_est()
+    pool = make_adapter_pool(16, [8, 16], [0.3, 0.1])
+    kw = dict(horizon=30.0, seed=2, n_grid=[4, 16])
+    for policy in ("fcfs", "adapter-fair"):
+        a = find_optimal_placement(est, pool, "medium", fast=False,
+                                   sched_policy=policy, **kw)
+        b = find_optimal_placement(est, pool, "medium", fast=True,
+                                   sched_policy=policy, **kw)
+        assert (a.n_adapters, a.slots, a.throughput) == \
+            (b.n_adapters, b.slots, b.throughput)
 
 
 # --------------------------------------------------------------------- #

@@ -1,0 +1,256 @@
+"""Scheduling-policy layer: registry, per-policy ordering semantics,
+FCFS byte-identity + the skip/re-queue ordering regression, and the
+drain-termination property (no policy may livelock or starve forever
+when arrivals stop)."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (DigitalTwin, FastTwin, WorkloadSpec,
+                        generate_requests, make_adapter_pool)
+from repro.core.digital_twin import EstimatorExecutor
+from repro.core.estimators import FittedEstimators
+from repro.core.fast_twin import FastEngine
+from repro.serving import (AdapterSlotCache, EngineConfig, PagedKVCache,
+                           Request, SCHED_POLICIES, Scheduler, SchedView,
+                           ServingEngine, make_sched_policy)
+from repro.serving.policy import (AdapterClusterPolicy, AdapterFairPolicy,
+                                  FCFSPolicy, SLOPriorityPolicy)
+
+
+def mk_est(kv_base: float = 120000.0, kv_slope: float = -60.0
+           ) -> FittedEstimators:
+    return FittedEstimators(
+        sched=np.array([4e-4, 8e-6, 4e-6, 2.5e-5]),
+        model=np.array([2.4e-2, 2.2e-4, 6.5e-6]),
+        adapters=np.array([1.06, 0.004]),
+        load=np.array([8e-3, 1.1e-3]),
+        load_disk_mult=1.7,
+        memmax=np.array([kv_base, kv_slope]))
+
+
+def _req(uid, adapter=0, arrival=0.0, p=4, o=4):
+    return Request(uid=uid, adapter=adapter, arrival=arrival,
+                   prompt_len=p, output_len=o)
+
+
+# --------------------------------------------------------------------- #
+# registry
+# --------------------------------------------------------------------- #
+
+def test_registry_contains_the_four_policies():
+    assert {"fcfs", "slo-priority", "adapter-fair",
+            "adapter-cluster"} <= set(SCHED_POLICIES)
+
+
+def test_make_sched_policy_resolution():
+    assert isinstance(make_sched_policy("fcfs"), FCFSPolicy)
+    assert isinstance(make_sched_policy(None), FCFSPolicy)
+    p = AdapterFairPolicy()
+    assert make_sched_policy(p) is p
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        make_sched_policy("nope")
+
+
+# --------------------------------------------------------------------- #
+# pure ordering semantics (stub view over (arrival, adapter, ctx) tuples)
+# --------------------------------------------------------------------- #
+
+class TupleView(SchedView):
+    def __init__(self, resident=()):
+        self._res = set(resident)
+
+    def arrival(self, it):
+        return it[0]
+
+    def adapter(self, it):
+        return it[1]
+
+    def context_len(self, it):
+        return it[2]
+
+    def resident(self, adapter):
+        return adapter in self._res
+
+
+def test_fcfs_order_is_identity():
+    items = [(3.0, 1, 10), (1.0, 2, 10), (2.0, 1, 10)]
+    assert FCFSPolicy().order(items, TupleView(), now=5.0) == items
+
+
+def test_slo_priority_prefers_urgent_class():
+    # class 0 (urgent) arrives later than class 3 but goes first
+    pol = SLOPriorityPolicy(slo_base=5.0, aging=0.5,
+                            priorities={7: 0, 9: 3})
+    urgent = (4.0, 7, 10)
+    lowly = (3.0, 9, 10)
+    assert pol.order([lowly, urgent], TupleView(), now=5.0) == \
+        [urgent, lowly]
+
+
+def test_slo_priority_aging_bounds_the_boost():
+    # a low-priority request older than slo_base*class/(1+aging) beats a
+    # fresh urgent request: low classes cannot starve
+    pol = SLOPriorityPolicy(slo_base=5.0, aging=0.5,
+                            priorities={7: 0, 9: 3})
+    now = 100.0
+    old_lowly = (now - 20.0, 9, 10)     # 20 s > 5*3/1.5 = 10 s
+    fresh_urgent = (now - 0.1, 7, 10)
+    assert pol.order([fresh_urgent, old_lowly], TupleView(), now=now) == \
+        [old_lowly, fresh_urgent]
+
+
+def test_adapter_fair_interleaves_and_charges_deficit():
+    pol = AdapterFairPolicy()
+    view = TupleView()
+    hot = [(float(i), 1, 50) for i in range(4)]       # adapter 1, 4 deep
+    cold = (10.0, 2, 50)                              # adapter 2, 1 deep
+    # heads first: hot[0] (older queue head, equal deficit) then cold,
+    # then the hot tail — the hot adapter cannot monopolize
+    got = pol.order(hot + [cold], view, now=20.0)
+    assert got[0] == hot[0] and got[1] == cold
+    # after charging adapter 1, the cold head overtakes the hot head
+    pol.on_admit(hot[0], view, now=20.0)
+    got = pol.order(hot[1:] + [cold], view, now=21.0)
+    assert got[0] == cold
+
+
+def test_adapter_cluster_groups_resident_first():
+    pol = AdapterClusterPolicy()
+    view = TupleView(resident={5})
+    a = (1.0, 3, 10)          # oldest, cold adapter
+    b = (2.0, 5, 10)          # resident adapter
+    c = (3.0, 5, 10)          # same resident adapter, batches with b
+    got = pol.order([a, b, c], view, now=4.0)
+    assert got == [b, c, a]
+
+
+# --------------------------------------------------------------------- #
+# FCFS byte-identity + the skip/re-queue ordering regression
+# --------------------------------------------------------------------- #
+
+def _sched(kv_tokens=1024, slots=2, max_running=8, policy="fcfs"):
+    kv = PagedKVCache(kv_tokens, block_size=16)
+    ac = AdapterSlotCache(slots)
+    return Scheduler(kv, ac, max_running, policy=policy)
+
+
+def test_fcfs_queue_order_preserved_across_skip_requeue_cycle():
+    """Regression (skip/re-queue path): mixing adapter-skips with a
+    max_running stop must leave the waiting queue in FCFS arrival order,
+    and the next cycle must admit in that order."""
+    s = _sched(slots=1, max_running=2)
+    r0 = _req(0, adapter=0, arrival=0.0)
+    s.add([r0])
+    s.schedule(now=0.0)                        # adapter 0 pins the slot
+    r1 = _req(1, adapter=1, arrival=1.0)       # adapter-skip (no slot)
+    r2 = _req(2, adapter=0, arrival=2.0)       # admitted (fills max_running)
+    r3 = _req(3, adapter=1, arrival=3.0)       # never attempted
+    r4 = _req(4, adapter=0, arrival=4.0)       # never attempted
+    s.add([r1, r2, r3, r4])
+    plan = s.schedule(now=4.0)
+    assert [r.uid for r in plan.admitted] == [2]
+    assert [r.uid for r in s.waiting] == [1, 3, 4]   # FCFS order intact
+    # full cycle: finish the running pair; the freed slots must go to the
+    # oldest waiting requests (r1 then r3), not to a later same-adapter one
+    for r in list(s.running):
+        s.finish(r)
+    plan = s.schedule(now=5.0)
+    assert [r.uid for r in plan.admitted] == [1, 3]
+    assert [r.uid for r in s.waiting] == [4]
+
+
+def test_fcfs_explicit_equals_default_engine_metrics():
+    est = mk_est()
+    pool = make_adapter_pool(16, [8, 16], [0.3, 0.1])
+    ranks = {a.uid: a.rank for a in pool}
+    spec = WorkloadSpec(adapters=pool, dataset="sharegpt", horizon=60.0,
+                        seed=5)
+    reqs = generate_requests(spec)
+
+    def run(**cfg_kw):
+        cfg = EngineConfig(kv_capacity_tokens=est.kv_capacity(4, 12.0),
+                           adapter_slots=4, **cfg_kw)
+        eng = ServingEngine(cfg, EstimatorExecutor(est, 4, 16, ranks))
+        return eng.run([Request(**{f: getattr(r, f) for f in
+                                   ("uid", "adapter", "arrival",
+                                    "prompt_len", "output_len")})
+                        for r in reqs], horizon=60.0)
+
+    default = run()
+    explicit = run(sched_policy="fcfs")
+    assert default == explicit
+    assert default.n_starved_requests == \
+        sum(default.starved_per_adapter.values())
+    assert default.ttft_p99 >= default.ttft_p50 >= 0.0
+
+
+# --------------------------------------------------------------------- #
+# drain termination: every policy finishes every request once arrivals
+# stop (no livelock, no forever-starvation) — object and SoA engines
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("policy", sorted(SCHED_POLICIES))
+@pytest.mark.parametrize("engine_cls", [ServingEngine, FastEngine])
+def test_drain_termination_under_slot_pressure(policy, engine_cls):
+    est = mk_est()
+    pool = make_adapter_pool(24, [8, 16, 32], [0.6, 0.15, 0.05])
+    ranks = {a.uid: a.rank for a in pool}
+    spec = WorkloadSpec(adapters=pool, dataset="medium", horizon=30.0,
+                        seed=17)
+    reqs = generate_requests(spec)
+    cfg = EngineConfig(kv_capacity_tokens=est.kv_capacity(3, 18.7),
+                       adapter_slots=3, sched_policy=policy)
+    eng = engine_cls(cfg, EstimatorExecutor(est, 3, 24, ranks))
+    m = eng.run(reqs, horizon=math.inf)
+    assert m.n_finished == len(reqs), \
+        f"{policy}/{engine_cls.__name__} left requests unserved"
+    assert m.n_starved_requests == 0 and not m.starved_per_adapter
+
+
+# --------------------------------------------------------------------- #
+# policy effect: adapter-fair spreads service across adapters
+# --------------------------------------------------------------------- #
+
+def _skewed_run(policy):
+    """Rotating-hot-phase skew under slot pressure (the fig_sched_policies
+    smoke point): the regime where admission ordering decides which
+    adapters ever see a slot."""
+    from repro.core import generate_drifting_requests, rotating_hot_phases
+    est = mk_est()
+    pool = make_adapter_pool(24, [8, 16], [0.05])
+    phases = rotating_hot_phases(pool, 60.0, n_phases=2, hot_fraction=0.2,
+                                 hot_rate=1.8, cold_rate=0.05)
+    reqs = generate_drifting_requests(pool, "medium", 60.0, phases, seed=3)
+    spec = WorkloadSpec(adapters=pool, dataset="medium", horizon=60.0,
+                        seed=3)
+    return FastTwin(est, mode="full", max_running=32,
+                    sched_policy=policy).simulate(
+        spec, slots=3, requests=reqs).metrics
+
+
+def test_adapter_fair_starves_fewer_than_fcfs_on_skew():
+    fair = _skewed_run("adapter-fair")
+    fcfs = _skewed_run("fcfs")
+    assert fcfs.n_starved_requests > 0
+    assert fair.n_starved_requests < fcfs.n_starved_requests
+    # and fewer *adapters* are fully shut out
+    assert len(fair.starved_per_adapter) <= len(fcfs.starved_per_adapter)
+
+
+def test_policy_metrics_match_between_twins():
+    """DigitalTwin and FastTwin agree per policy on the skewed point."""
+    est = mk_est()
+    pool = make_adapter_pool(12, [8, 16], [0.8, 0.1])
+    spec = WorkloadSpec(adapters=pool, dataset="medium", horizon=40.0,
+                        seed=3)
+    reqs = generate_requests(spec)
+    for policy in sorted(SCHED_POLICIES):
+        legacy = DigitalTwin(est, mode="full", sched_policy=policy) \
+            .simulate(spec, slots=3, requests=reqs).metrics
+        fast = FastTwin(est, mode="full", sched_policy=policy) \
+            .simulate(spec, slots=3, requests=reqs).metrics
+        assert legacy.n_starved_requests == fast.n_starved_requests
+        assert legacy.starved_per_adapter == fast.starved_per_adapter
+        assert legacy.throughput == fast.throughput, policy
