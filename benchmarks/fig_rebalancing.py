@@ -3,31 +3,43 @@
 The rebalancing figure (ours; no paper counterpart — this is the cluster
 extension of Fig. 5's placement sensitivity): a workload whose hot
 adapter set rotates between phases is served by the same affinity router
-under three regimes —
+under four regimes —
 
   * ``static``     — affinity routing only; residency earned in one
                      phase is wrong for the next,
   * ``rebalance``  — the EWMA ``RebalancePolicy`` migrates resident
                      adapters as load drifts (Fig. 4 cost charged),
+  * ``predictive`` — ``PredictiveRebalancer``: EWMA rate *forecasts*
+                     through the trained ``ClusterPlacementModel`` plan
+                     migrations ahead of drift, and the model's
+                     bin-packing is the fleet's warm initial placement,
   * ``oracle``     — per-phase LPT assignment computed from the *true*
                      phase rates (perfect future knowledge upper bound).
 
 A second run kills one replica mid-stream with rebalancing on and
 verifies every request still completes on the survivors (the
-fault-tolerance acceptance).
+fault-tolerance acceptance).  A third scenario pins a single hot adapter
+under *hard* affinity (placement-driven routing, as in weight-pinned
+deployments): migration alone cannot split one adapter's load — the
+migration-only arm starves — while the ``Replicate`` plan action serves
+it from two homes and completes the workload.
 """
 from __future__ import annotations
 
 import bisect
+import dataclasses
+import functools
 from typing import Dict, Sequence
 
 from .common import CsvOut, fitted_estimators, is_smoke
-from repro.core import (ClusterDigitalTwin, WorkloadSpec,
-                        generate_drifting_requests, make_adapter_pool,
-                        rotating_hot_phases, split_pool_by_rate)
+from repro.core import (ClusterDigitalTwin, Scenario, WorkloadSpec,
+                        generate_drifting_requests, generate_requests,
+                        make_adapter_pool, rotating_hot_phases,
+                        split_pool_by_rate, train_cluster_placement_model)
 from repro.core.cluster_twin import ClusterDTResult
 from repro.serving import ClusterRouter, FailureEvent
 from repro.serving.cluster import RoutingPolicy, register_policy
+from repro.serving.predictive import plan_initial_placement
 from repro.serving.request import Adapter
 
 
@@ -77,10 +89,25 @@ def drift_config(smoke: bool) -> dict:
                 cold_rate=0.02, epoch=5.0, seed=3)
 
 
+@functools.lru_cache()
+def placement_model():
+    """The tiny trained cluster placement model the predictive arm runs
+    on (deterministic: fixed scenarios, seeds and forest)."""
+    est = fitted_estimators()
+    scenarios = [
+        Scenario(rates=(1.2, 0.3, 0.02), ranks=(8, 16), dataset="medium"),
+        Scenario(rates=(0.6, 0.1, 0.02), ranks=(8, 16), dataset="medium"),
+        Scenario(rates=(0.3, 0.05, 0.01), ranks=(8, 16), dataset="medium"),
+    ]
+    return train_cluster_placement_model(
+        est, scenarios, max_adapters=16, replica_counts=(1, 2),
+        horizon=20.0, seed=7, holdout=0.0)
+
+
 def run_mode(est, mode: str, cfg: dict,
              failures: Sequence[FailureEvent] = ()) -> ClusterDTResult:
     """One drifting-popularity run of the ClusterDigitalTwin online loop
-    under ``mode`` in {static, rebalance, oracle}."""
+    under ``mode`` in {static, rebalance, predictive, oracle}."""
     pool = make_adapter_pool(cfg["n_adapters"], [8, 16], [cfg["cold_rate"]])
     mean_rank = sum(a.rank for a in pool) / len(pool)
     phases = rotating_hot_phases(pool, cfg["horizon"],
@@ -102,16 +129,69 @@ def run_mode(est, mode: str, cfg: dict,
         router = ClusterRouter(specs, policy="affinity")
     spec = WorkloadSpec(adapters=pool, dataset="medium",
                         horizon=cfg["horizon"], seed=cfg["seed"])
+    rebalancer = None
+    initial = None
+    if mode == "predictive":
+        model = placement_model()
+        rebalancer = twin.predictive_rebalancer(spec, router, model)
+        # the model's bin-packing on the *initial* popularity becomes the
+        # fleet's warm start (replaces first-touch affinity scatter)
+        plan_pool = [dataclasses.replace(
+            a, rate=phases[0].rates.get(a.uid, a.rate)) for a in pool]
+        initial = plan_initial_placement(model, plan_pool,
+                                         spec.length_stats(),
+                                         cfg["n_replicas"])
     return twin.simulate_online(
         spec, router, requests=reqs, epoch=cfg["epoch"],
-        rebalance=(mode == "rebalance"), failures=failures)
+        rebalance=(mode == "rebalance"), rebalancer=rebalancer,
+        failures=failures, initial_placement=initial)
+
+
+# --------------------------------------------------------------------------- #
+# single-hot-adapter hotspot: migration cannot split one adapter's load
+# --------------------------------------------------------------------------- #
+
+def hotspot_config(smoke: bool) -> dict:
+    # max_running caps each replica's continuous batch (a realistic
+    # per-node concurrency limit) so one home genuinely cannot absorb
+    # the hot adapter by growing its batch without bound
+    if smoke:
+        return dict(n_replicas=2, n_adapters=4, slots=4, horizon=60.0,
+                    hot_rate=10.0, cold_rate=0.02, epoch=5.0, seed=11,
+                    max_running=64)
+    return dict(n_replicas=2, n_adapters=4, slots=4, horizon=90.0,
+                hot_rate=10.0, cold_rate=0.02, epoch=5.0, seed=11,
+                max_running=64)
+
+
+def run_hotspot(est, cfg: dict, replicate: bool) -> ClusterDTResult:
+    """One adapter hot enough to saturate a whole replica, under *hard*
+    affinity (no overload spill — routing follows placement, as it must
+    when adapter weights are pinned).  The migration-only rebalancer can
+    relocate but never split the hotspot; ``replicate=True`` arms the
+    ``Replicate`` plan action so a second home shares the load."""
+    pool = make_adapter_pool(cfg["n_adapters"], [8], [cfg["cold_rate"]])
+    pool[0] = Adapter(uid=0, rank=8, rate=cfg["hot_rate"])
+    spec = WorkloadSpec(adapters=pool, dataset="medium",
+                        horizon=cfg["horizon"], seed=cfg["seed"])
+    reqs = generate_requests(spec)
+    twin = ClusterDigitalTwin(est, mode="full",
+                              max_running=cfg["max_running"])
+    router = ClusterRouter(
+        twin.specs_from_slots([cfg["slots"]] * cfg["n_replicas"],
+                              mean_rank=8.0),
+        policy="affinity", overload_factor=1e9, slack=1e9)
+    rebalancer = twin.rebalancer(spec, router, replicate=replicate)
+    return twin.simulate_online(
+        spec, router, requests=reqs, epoch=cfg["epoch"],
+        rebalance=False, rebalancer=rebalancer, drain=False)
 
 
 def main(out: CsvOut) -> None:
     est = fitted_estimators()
     cfg = drift_config(is_smoke())
     results: Dict[str, ClusterDTResult] = {}
-    for mode in ("static", "rebalance", "oracle"):
+    for mode in ("static", "rebalance", "predictive", "oracle"):
         res = run_mode(est, mode, cfg)
         results[mode] = res
         m = res.metrics
@@ -126,6 +206,38 @@ def main(out: CsvOut) -> None:
             "rebalancing lost to static affinity routing: "
             f"{results['rebalance'].metrics.throughput:.1f} < "
             f"{results['static'].metrics.throughput:.1f} tok/s")
+    if results["predictive"].metrics.throughput < \
+            results["rebalance"].metrics.throughput:
+        raise RuntimeError(
+            "model-driven (predictive) rebalancing lost to reactive: "
+            f"{results['predictive'].metrics.throughput:.1f} < "
+            f"{results['rebalance'].metrics.throughput:.1f} tok/s")
+
+    # single-hot-adapter hotspot: migration alone starves, replication
+    # completes (the S-LoRA/Punica observation, asserted)
+    hcfg = hotspot_config(is_smoke())
+    mig_only = run_hotspot(est, hcfg, replicate=False)
+    repl = run_hotspot(est, hcfg, replicate=True)
+    for tag, res in (("hotspot_migration_only", mig_only),
+                     ("hotspot_replicate", repl)):
+        m = res.metrics
+        out.row(tag, 1.0,
+                f"thpt={m.throughput:.0f};ideal={m.ideal_throughput:.0f};"
+                f"finished={m.n_finished};starved={m.starved};"
+                f"replications={len(res.online.replications)};"
+                f"per_replica={[r.n_finished for r in m.per_replica]}")
+    if not mig_only.metrics.starved:
+        raise RuntimeError(
+            "hotspot case lost its teeth: migration-only run no longer "
+            f"starves ({mig_only.metrics.throughput:.1f} of "
+            f"{mig_only.metrics.ideal_throughput:.1f} tok/s)")
+    if repl.metrics.starved or not repl.online.replications:
+        raise RuntimeError("replication failed to resolve the single-hot-"
+                           "adapter starvation migration cannot fix")
+    if repl.metrics.n_finished <= mig_only.metrics.n_finished:
+        raise RuntimeError(
+            "replication finished no more requests than migration-only: "
+            f"{repl.metrics.n_finished} <= {mig_only.metrics.n_finished}")
 
     # kill one replica at 40% of the horizon, rebalancing on
     kill = FailureEvent(replica=0, at=0.4 * cfg["horizon"])

@@ -8,8 +8,9 @@ from .forest import (MODEL_ZOO, DecisionTree, LinearRegression,  # noqa
                      RandomForest, Ridge)
 from .cluster_twin import ClusterDigitalTwin, ClusterDTResult  # noqa
 from .placement import (CLUSTER_FEATURE_NAMES, CLUSTER_TARGET_NAMES,  # noqa
-                        ClusterPlacementModel, ClusterPlacementResult,
-                        PlacementPoint, PlacementResult, ReplicaPlacement,
+                        ClusterModelNodeView, ClusterPlacementModel,
+                        ClusterPlacementResult, PlacementPoint,
+                        PlacementResult, ReplicaPlacement,
                         encode_cluster_features, find_cluster_placement,
                         find_cluster_placement_joint,
                         find_optimal_placement, label_cluster_scenarios,

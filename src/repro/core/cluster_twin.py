@@ -114,6 +114,19 @@ class ClusterDigitalTwin:
             load_cost_fn=lambda uid: self.est.lat_load(ranks.get(uid, 8)),
             **kwargs)
 
+    def predictive_rebalancer(self, spec: WorkloadSpec,
+                              router: ClusterRouter, model,
+                              **kwargs) -> "PredictiveRebalancer":
+        """A ``PredictiveRebalancer`` (model-driven planning) with the
+        same fitted Fig. 4 migration cost as :meth:`rebalancer`."""
+        from ..serving.predictive import PredictiveRebalancer
+        ranks = {a.uid: a.rank for a in spec.adapters}
+        return PredictiveRebalancer(
+            router, model=model, pool=spec.adapters,
+            length_stats=spec.length_stats(),
+            load_cost_fn=lambda uid: self.est.lat_load(ranks.get(uid, 8)),
+            **kwargs)
+
     def simulate_online(self, spec: WorkloadSpec, router: ClusterRouter,
                         requests: Optional[List[Request]] = None,
                         epoch: float = 5.0, rebalance: bool = True,
@@ -121,7 +134,9 @@ class ClusterDigitalTwin:
                         failures: Sequence[FailureEvent] = (),
                         straggler_factor: float = 0.0,
                         horizon: Optional[float] = None,
-                        drain: bool = True) -> ClusterDTResult:
+                        drain: bool = True,
+                        initial_placement: Optional[Dict[int, int]] = None
+                        ) -> ClusterDTResult:
         """Epoch-driven fleet simulation: the production ``run_online``
         loop over estimator-backed engines.
 
@@ -153,7 +168,8 @@ class ClusterDigitalTwin:
         report = cluster.run_online(
             requests, horizon=horizon or spec.horizon, epoch=epoch,
             rebalancer=rebalancer, failures=failures,
-            straggler_factor=straggler_factor, drain=drain)
+            straggler_factor=straggler_factor, drain=drain,
+            initial_placement=initial_placement)
         return ClusterDTResult(
             metrics=report.metrics,
             router_summary=report.router_summary,

@@ -755,6 +755,7 @@ class FastEngine:
             ttft_p99=pct["p99"],
             n_starved_requests=int(len(starved_rows)),
             starved_per_adapter=starved_per_adapter,
+            ttft_samples=[float(t) for t in ttfts],
         )
 
     # ------------------------------------------------------------------ #

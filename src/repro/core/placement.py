@@ -287,6 +287,38 @@ class ClusterPlacementModel:
         imp = self.model.feature_importances()
         return dict(zip(self.feature_names, imp.tolist()))
 
+    def as_node_pipeline(self, sched_policy: str = "fcfs"
+                         ) -> "ClusterModelNodeView":
+        """Per-node inference view: the same trained forest queried at
+        ``n_replicas=1`` behind the ``PlacementPipeline.recommend``
+        signature, so plan-level consumers (``PlacementRouter.plan``,
+        ``repro.serving.predictive.plan_initial_placement``) can reuse
+        the cluster model online for "how much fits on ONE replica"
+        questions.  ``sched_policy`` bakes the fleet's scheduling policy
+        into the view — callers without the parameter (e.g.
+        ``PlacementRouter.plan``) still query the right feature."""
+        return ClusterModelNodeView(self, sched_policy=sched_policy)
+
+
+@dataclasses.dataclass
+class ClusterModelNodeView:
+    """``PlacementPipeline``-shaped facade over a ``ClusterPlacementModel``
+    answering per-node capacity queries (``n_replicas=1``)."""
+    model: ClusterPlacementModel
+    sched_policy: str = "fcfs"
+
+    def recommend(self, rates: Sequence[float], ranks: Sequence[int],
+                  length_stats: Dict[str, float],
+                  sched_policy: Optional[str] = None) -> Dict[str, float]:
+        rec = self.model.recommend(
+            rates, ranks, length_stats, n_replicas=1,
+            sched_policy=sched_policy or self.sched_policy)
+        return {
+            "throughput": rec["total_throughput"],
+            "served_adapters": rec["served_adapters"],
+            "adapter_slots": rec["slots_per_replica"],
+        }
+
 
 def train_cluster_placement_model(
         est: FittedEstimators, scenarios: Sequence, max_adapters: int,

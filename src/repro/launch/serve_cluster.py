@@ -13,18 +13,27 @@ Online (epoch loop: heartbeats, failure drain, optional rebalancing):
     python -m repro.launch.serve_cluster --replicas 2 --online --rebalance
     python -m repro.launch.serve_cluster --replicas 3 --online --rebalance \\
         --drift 3 --kill 1@30 --epoch 5
+
+Model-driven (predictive) rebalancing + hot-adapter replication:
+
+    python -m repro.launch.serve_cluster --replicas 2 --online \\
+        --rebalance predictive --plan-initial --drift 3
+    python -m repro.launch.serve_cluster --replicas 2 --online \\
+        --rebalance reactive --replicate
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 from typing import List
 
 from ..core.workload import (WorkloadSpec, generate_drifting_requests,
                              generate_requests, make_adapter_pool,
                              rotating_hot_phases)
 from ..serving import (ClusterMetrics, ClusterRouter, FailureEvent,
-                       HardwareProfile, RebalancePolicy, ServingCluster,
-                       SyntheticExecutor, make_replica_specs)
+                       HardwareProfile, PredictiveRebalancer,
+                       RebalancePolicy, ServingCluster, SyntheticExecutor,
+                       make_replica_specs, plan_initial_placement)
 from ..serving.cluster import POLICIES
 from ..serving.policy import SCHED_POLICIES
 
@@ -69,6 +78,43 @@ def _report(tag: str, m: ClusterMetrics) -> None:
               + ", ".join(f"{a}:{c}" for a, c in worst))
 
 
+_MODEL_CACHE: dict = {}
+
+
+def _placement_model(args, profile):
+    """Train the (tiny) cluster placement model the predictive path
+    feeds EWMA forecasts through — the CLI's creation phase.  Memoized:
+    the --compare-* loops call run_once per policy with identical
+    workload arguments, and the model only depends on those."""
+    key = (args.replicas, args.adapters, args.rank, args.rate,
+           args.dataset, args.seed, args.slots)
+    if key in _MODEL_CACHE:
+        return _MODEL_CACHE[key]
+    from ..core import (Scenario, collect_benchmark, collect_memmax,
+                        fit_estimators, train_cluster_placement_model)
+    slots = max(_int_list(args.slots, args.replicas, "slots"))
+    ranks = {i: args.rank for i in range(args.adapters)}
+    ex = SyntheticExecutor(profile, ranks, slots=slots,
+                          n_adapters=args.adapters, seed=args.seed)
+    est = fit_estimators(collect_benchmark(ex, slots, args.adapters, ranks),
+                         collect_memmax(profile), slots, args.adapters)
+    r = args.rate
+    scenarios = [
+        Scenario(rates=(r * 8, r, r / 4), ranks=(args.rank,),
+                 dataset=args.dataset),
+        Scenario(rates=(r * 4, r, r / 2), ranks=(args.rank,),
+                 dataset=args.dataset),
+        Scenario(rates=(r * 2, r, r), ranks=(args.rank,),
+                 dataset=args.dataset),
+    ]
+    model = train_cluster_placement_model(
+        est, scenarios, max_adapters=args.adapters,
+        replica_counts=(1, args.replicas), horizon=20.0, seed=args.seed,
+        holdout=0.0)
+    _MODEL_CACHE[key] = model
+    return model
+
+
 def run_once(args, policy: str, verbose: bool = True) -> ClusterMetrics:
     profile = HardwareProfile()
     slots = _int_list(args.slots, args.replicas, "slots")
@@ -83,6 +129,7 @@ def run_once(args, policy: str, verbose: bool = True) -> ClusterMetrics:
     ranks = {a.uid: a.rank for a in pool}
     spec = WorkloadSpec(adapters=pool, dataset=args.dataset,
                         horizon=args.horizon, seed=args.seed)
+    phases = None
     if args.drift > 0:
         phases = rotating_hot_phases(pool, args.horizon,
                                      n_phases=args.drift,
@@ -100,23 +147,52 @@ def run_once(args, policy: str, verbose: bool = True) -> ClusterMetrics:
                  for i, s in enumerate(specs)]
     cluster = ServingCluster(router, executors)
 
-    online = args.online or args.rebalance or args.kill or args.drift > 0
+    online = args.online or args.rebalance or args.kill \
+        or args.drift > 0 or args.replicate or args.plan_initial
     if online:
         rebalancer = None
-        if args.rebalance:
-            load_cost = profile.load_cpu_base + \
-                profile.load_cpu_per_rank * args.rank
+        model = None
+        if args.rebalance == "predictive" or args.plan_initial:
+            model = _placement_model(args, profile)
+        load_cost = profile.load_cpu_base + \
+            profile.load_cpu_per_rank * args.rank
+        if args.rebalance == "predictive":
+            rebalancer = PredictiveRebalancer(
+                router, model=model, pool=pool,
+                length_stats=spec.length_stats(),
+                load_cost_fn=lambda uid: load_cost,
+                replicate=args.replicate)
+        elif args.rebalance or args.replicate:
             rebalancer = RebalancePolicy(
-                router, load_cost_fn=lambda uid: load_cost)
+                router, load_cost_fn=lambda uid: load_cost,
+                replicate=args.replicate)
+        initial = None
+        if args.plan_initial:
+            # under drift, pack on the *initial* (phase-0) popularity —
+            # the uniform base rates would make the bin-packing blind to
+            # the hot set the stream actually opens with
+            plan_pool = pool if phases is None else [
+                dataclasses.replace(a, rate=phases[0].rates.get(a.uid,
+                                                                a.rate))
+                for a in pool]
+            initial = plan_initial_placement(
+                model, plan_pool, spec.length_stats(), args.replicas,
+                sched_policy=args.sched_policy)
         report = cluster.run_online(
             reqs, horizon=args.horizon, epoch=args.epoch,
             rebalancer=rebalancer,
             failures=_failures(args.kill, args.replicas),
-            straggler_factor=args.straggler_factor)
+            straggler_factor=args.straggler_factor,
+            initial_placement=initial)
         metrics = report.metrics
         if verbose:
+            # report.migrations is the full executed-plan log; count the
+            # actual migrations separately from (un)replications
+            n_migs = len(report.migrations) - len(report.replications) \
+                - len(report.unreplications)
             print(f"  online: epochs={report.n_epochs} "
-                  f"migrations={len(report.migrations)} "
+                  f"migrations={n_migs} "
+                  f"replications={len(report.replications)} "
                   f"rerouted={report.n_rerouted} "
                   f"failures_detected={report.failures_detected}")
     else:
@@ -160,8 +236,22 @@ def main() -> None:
     # online loop -------------------------------------------------------- #
     ap.add_argument("--online", action="store_true",
                     help="epoch-driven loop (heartbeats, failure drain)")
-    ap.add_argument("--rebalance", action="store_true",
-                    help="enable the EWMA adapter rebalancer (implies "
+    ap.add_argument("--rebalance", nargs="?", const="reactive", default="",
+                    choices=("reactive", "predictive"),
+                    help="enable adapter rebalancing (implies --online): "
+                         "'reactive' (bare --rebalance) reacts to EWMA "
+                         "drift; 'predictive' plans migrations ahead of "
+                         "drift by feeding EWMA forecasts through the "
+                         "trained cluster placement model")
+    ap.add_argument("--replicate", action="store_true",
+                    help="arm hot-adapter replication: an adapter whose "
+                         "EWMA rate exceeds a per-replica traffic share "
+                         "is served from two homes (implies --online and "
+                         "the reactive rebalancer unless --rebalance "
+                         "predictive is given)")
+    ap.add_argument("--plan-initial", action="store_true",
+                    help="warm the fleet with the placement model's "
+                         "bin-packing before serving starts (implies "
                          "--online)")
     ap.add_argument("--epoch", type=float, default=5.0,
                     help="online loop window length (s)")

@@ -15,4 +15,7 @@ from .cluster import (POLICIES, ClusterMetrics, ClusterRouter,  # noqa
                       RoutingPolicy, ServingCluster, make_replica_specs,
                       register_policy)
 from .rebalance import (AdapterLoadTracker, Migration,  # noqa
-                        RebalancePolicy, RebalanceReport)
+                        PlanAction, RebalancePolicy, RebalanceReport,
+                        Replicate, Unreplicate)
+from .predictive import (PredictiveRebalancer,  # noqa
+                         plan_initial_placement)

@@ -39,7 +39,8 @@ import math
 from typing import Dict, List, Optional, Sequence, Tuple, Type, Union
 
 from .engine import EngineConfig, ServingEngine
-from .metrics import ServingMetrics
+from .metrics import ServingMetrics, ttft_percentiles
+from .rebalance import Replicate, Unreplicate
 from .request import Request
 
 
@@ -214,8 +215,16 @@ class ClusterRouter:
         # adapter uid -> cumulative routed tokens, per replica (rebalancer)
         self.routed_tokens: List[Dict[int, float]] = [{} for _ in range(n)]
         self.assignments: Dict[int, int] = {}     # request uid -> replica
+        # adapter uid -> its home replicas, for adapters served from more
+        # than one replica (hot-adapter replication); the affinity
+        # policy's least-loaded-holder rule dispatches a multi-home
+        # adapter's requests across its homes weighted by each home's
+        # capacity-normalised load
+        self.replicated: Dict[int, set] = {}
         self.n_cold_routes = 0    # routed to a replica not holding adapter
         self.n_migrations = 0
+        self.n_replications = 0
+        self.n_unreplications = 0
         self.alive: List[bool] = [True] * n
         self.straggler: List[bool] = [False] * n
         self.last_heartbeat: List[float] = [0.0] * n
@@ -259,10 +268,14 @@ class ClusterRouter:
 
     def mark_dead(self, rep: int) -> List[int]:
         """Drain a replica from the routing tables; returns the adapters
-        the router believed resident there (for re-warming elsewhere)."""
+        the router believed resident there (for re-warming elsewhere).
+        A replicated adapter that loses this home degrades cleanly to
+        single-home on its surviving peer."""
         self.alive[rep] = False
         orphaned = sorted(self.resident[rep])
         self.resident[rep] = {}
+        for a in orphaned:
+            self._drop_home(a, rep)
         if not any(self.alive):
             raise RuntimeError("all replicas dead")
         return orphaned
@@ -271,19 +284,73 @@ class ClusterRouter:
         self.straggler[rep] = flag
 
     # ------------------------------------------------------------------ #
-    # migration (rebalancer side-channel)
+    # residency plumbing (shared by routing, migration and replication)
+    # ------------------------------------------------------------------ #
+    def _drop_home(self, adapter: int, rep: int) -> None:
+        """Forget one home of a replicated adapter; a single survivor
+        means the adapter is simply resident there (no longer special)."""
+        homes = self.replicated.get(adapter)
+        if homes is None:
+            return
+        homes.discard(rep)
+        if len(homes) < 2:
+            del self.replicated[adapter]
+
+    def _evict_lru(self, rep: int) -> None:
+        """Evict the LRU residency belief, sparing replicated homes: the
+        rebalancer multi-homed those deliberately, and letting routing
+        churn silently collapse them would undo its plan.  Only when
+        every entry is a replicated home does the plain LRU fall back
+        (and the dropped one degrades to single-home)."""
+        res = self.resident[rep]
+        spared = [a for a in res
+                  if a not in self.replicated
+                  or rep not in self.replicated[a]]
+        lru = min(spared or res, key=res.get)
+        del res[lru]
+        self._drop_home(lru, rep)
+
+    def _admit_resident(self, adapter: int, rep: int) -> None:
+        self._seq += 1
+        res = self.resident[rep]
+        slots = self.specs[rep].adapter_slots
+        if adapter not in res and slots > 0 and len(res) >= slots:
+            self._evict_lru(rep)
+        res[adapter] = self._seq
+
+    def homes(self, adapter: int) -> List[int]:
+        """Alive replicas currently believed to hold ``adapter``."""
+        return [i for i in range(self.n_replicas)
+                if self.alive[i] and adapter in self.resident[i]]
+
+    def warm(self, adapter: int, rep: int) -> None:
+        """Seed a residency belief (plan-level initial placement) —
+        neither a cold route nor a migration."""
+        self._admit_resident(adapter, rep)
+
+    # ------------------------------------------------------------------ #
+    # migration / replication (rebalancer side-channel)
     # ------------------------------------------------------------------ #
     def migrate(self, adapter: int, src: int, dst: int) -> None:
         """Move an adapter's believed residency from ``src`` to ``dst``."""
         self.resident[src].pop(adapter, None)
-        self._seq += 1
-        res = self.resident[dst]
-        slots = self.specs[dst].adapter_slots
-        if adapter not in res and slots > 0 and len(res) >= slots:
-            lru = min(res, key=res.get)
-            del res[lru]
-        res[adapter] = self._seq
+        self._drop_home(adapter, src)
+        self._admit_resident(adapter, dst)
         self.n_migrations += 1
+
+    def replicate(self, adapter: int, src: int, dst: int) -> None:
+        """Give ``adapter`` a second home on ``dst`` (``src`` keeps
+        serving it); routing splits its traffic across the homes."""
+        self._admit_resident(adapter, dst)
+        homes = self.replicated.setdefault(adapter, set())
+        homes.update((src, dst))
+        self.n_replications += 1
+
+    def unreplicate(self, adapter: int, rep: int) -> None:
+        """Drop one home of a replicated adapter (back to single-home)."""
+        self.resident[rep].pop(adapter, None)
+        self._drop_home(adapter, rep)
+        self.n_unreplications += 1
 
     # ------------------------------------------------------------------ #
     def route(self, req: Request) -> int:
@@ -296,15 +363,9 @@ class ClusterRouter:
         return rep
 
     def _commit(self, rep: int, req: Request) -> None:
-        self._seq += 1
-        res = self.resident[rep]
-        if req.adapter not in res:
+        if req.adapter not in self.resident[rep]:
             self.n_cold_routes += 1
-            slots = self.specs[rep].adapter_slots
-            if slots > 0 and len(res) >= slots:
-                lru = min(res, key=res.get)
-                del res[lru]
-        res[req.adapter] = self._seq
+        self._admit_resident(req.adapter, rep)
         tokens = req.prompt_len + req.output_len
         self.assigned_tokens[rep] += tokens
         self.assigned_requests[rep] += 1
@@ -327,6 +388,10 @@ class ClusterRouter:
             "loads": [self.load(i) for i in range(self.n_replicas)],
             "n_cold_routes": self.n_cold_routes,
             "n_migrations": self.n_migrations,
+            "n_replications": self.n_replications,
+            "n_unreplications": self.n_unreplications,
+            "replicated": {a: sorted(h)
+                           for a, h in sorted(self.replicated.items())},
             "alive": list(self.alive),
         }
 
@@ -353,8 +418,9 @@ class ClusterMetrics:
     n_preemptions: int
     max_kv_used: float
     n_loads: int
-    # TTFT tail, aggregated as the finished-weighted mean of per-replica
-    # percentiles (exact pooled percentiles would need the raw samples)
+    # TTFT tail: exact percentiles over the pooled per-replica samples
+    # (falls back to the finished-weighted mean of per-replica
+    # percentiles only for sample-free hand-built metrics)
     ttft_p50: float = 0.0
     ttft_p99: float = 0.0
     n_starved_requests: int = 0
@@ -393,6 +459,21 @@ class ClusterMetrics:
             for a, c in m.starved_per_adapter.items():
                 starved_per_adapter[a] = starved_per_adapter.get(a, 0) + c
 
+        # exact cluster percentiles from the pooled raw TTFT samples —
+        # but only when every replica with TTFT evidence brought its
+        # samples; a mixed set (one engine-built, one hand-built without
+        # samples) would silently drop the sample-free replica, so it
+        # falls back to the finished-weighted approximation instead
+        pooled = [t for m in per for t in m.ttft_samples]
+        mixed = any(not m.ttft_samples and (m.ttft_p50 or m.ttft_p99)
+                    for m in per)
+        if pooled and not mixed:
+            pct = ttft_percentiles(pooled)
+            p50, p99 = pct["p50"], pct["p99"]
+        else:
+            p50 = wmean([m.ttft_p50 for m in per])
+            p99 = wmean([m.ttft_p99 for m in per])
+
         return cls(
             per_replica=per,
             throughput=out_tokens / duration if duration > 0 else 0.0,
@@ -404,8 +485,8 @@ class ClusterMetrics:
             n_preemptions=sum(m.n_preemptions for m in per),
             max_kv_used=max((m.max_kv_used for m in per), default=0.0),
             n_loads=sum(m.n_loads for m in per),
-            ttft_p50=wmean([m.ttft_p50 for m in per]),
-            ttft_p99=wmean([m.ttft_p99 for m in per]),
+            ttft_p50=p50,
+            ttft_p99=p99,
             n_starved_requests=sum(m.n_starved_requests for m in per),
             starved_per_adapter=starved_per_adapter,
         )
@@ -426,7 +507,9 @@ class FailureEvent:
 @dataclasses.dataclass
 class OnlineReport:
     """Outcome of one ``run_online``: aggregate metrics + the living-system
-    event log (migrations, detected failures, straggler epochs)."""
+    event log (executed plan actions, detected failures, straggler
+    epochs).  ``migrations`` is the full executed-plan log — it holds
+    ``Migration | Replicate | Unreplicate`` actions in execution order."""
     metrics: Optional[ClusterMetrics]
     n_epochs: int
     migrations: List[object]
@@ -434,6 +517,14 @@ class OnlineReport:
     n_rerouted: int
     straggler_epochs: Dict[int, int]           # replica -> #epochs flagged
     router_summary: Dict[str, object]
+
+    @property
+    def replications(self) -> List[object]:
+        return [a for a in self.migrations if isinstance(a, Replicate)]
+
+    @property
+    def unreplications(self) -> List[object]:
+        return [a for a in self.migrations if isinstance(a, Unreplicate)]
 
 
 class ServingCluster:
@@ -483,7 +574,9 @@ class ServingCluster:
                    heartbeat_timeout: Optional[float] = None,
                    straggler_factor: float = 0.0,
                    drain: bool = True,
-                   max_drain_epochs: int = 1000) -> OnlineReport:
+                   max_drain_epochs: int = 1000,
+                   initial_placement: Optional[Dict[int, int]] = None
+                   ) -> OnlineReport:
         """Serve the stream in ``epoch``-long windows.
 
         Per window: (1) route the window's arrivals with the router's
@@ -502,6 +595,13 @@ class ServingCluster:
         With ``drain`` the loop keeps running windows past ``horizon``
         (no new arrivals) until every routed request finished — this is
         what "a dead replica's requests complete on survivors" means.
+
+        ``initial_placement`` (adapter uid -> replica) warms the fleet
+        before serving starts — typically ``PlacementRouter.plan``'s
+        model-predicted bin-packing (see
+        ``repro.serving.predictive.plan_initial_placement``) instead of
+        letting first-touch affinity scatter the pool.  Warm-up happens
+        at t=0, before any request, so no Fig. 4 cost is charged.
         """
         if epoch <= 0:
             raise ValueError(f"epoch must be positive, got {epoch}")
@@ -509,6 +609,12 @@ class ServingCluster:
         router.reset()
         for eng in self.engines:
             eng.reset_stream()
+        if initial_placement:
+            for uid in sorted(initial_placement):
+                rep = initial_placement[uid]
+                if 0 <= rep < router.n_replicas and router.alive[rep] \
+                        and self.engines[rep].preload_adapter(uid, 0.0):
+                    router.warm(uid, rep)
         hb_timeout = (1.5 * epoch) if heartbeat_timeout is None \
             else heartbeat_timeout
         killed_at = {f.replica: f.at for f in failures}
@@ -615,13 +721,24 @@ class ServingCluster:
                            for eng in self.engines]
                 rebalancer.observe(now=t1, window_s=t1 - t,
                                    served_tokens=served, backlog=backlog)
-                for mig in rebalancer.propose(now=t1):
-                    if self.engines[mig.dst].preload_adapter(
-                            mig.adapter, mig.cost_s):
-                        self.engines[mig.src].evict_adapter(mig.adapter)
-                        router.migrate(mig.adapter, mig.src, mig.dst)
-                        rebalancer.commit(mig)
-                        report.migrations.append(mig)
+                for act in rebalancer.propose(now=t1):
+                    if isinstance(act, Replicate):
+                        if self.engines[act.dst].preload_adapter(
+                                act.adapter, act.cost_s):
+                            router.replicate(act.adapter, act.src, act.dst)
+                            rebalancer.commit(act)
+                            report.migrations.append(act)
+                    elif isinstance(act, Unreplicate):
+                        if self.engines[act.rep].evict_adapter(act.adapter):
+                            router.unreplicate(act.adapter, act.rep)
+                            rebalancer.commit(act)
+                            report.migrations.append(act)
+                    elif self.engines[act.dst].preload_adapter(
+                            act.adapter, act.cost_s):
+                        self.engines[act.src].evict_adapter(act.adapter)
+                        router.migrate(act.adapter, act.src, act.dst)
+                        rebalancer.commit(act)
+                        report.migrations.append(act)
             tok_snap = [eng.n_tokens_out for eng in self.engines]
             t = t1
 

@@ -33,6 +33,11 @@ class ServingMetrics:
     n_starved_requests: int = 0  # arrived but never got a first token
     starved_per_adapter: Dict[int, int] = dataclasses.field(
         default_factory=dict)  # adapter uid -> starved request count
+    # raw per-request TTFT samples: ``ClusterMetrics.aggregate`` pools
+    # these across replicas to compute *exact* cluster percentiles (a
+    # finished-weighted mean of per-replica percentiles is biased
+    # whenever replicas see different TTFT distributions)
+    ttft_samples: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def starved(self) -> bool:
@@ -80,6 +85,7 @@ def summarize(reqs: List[Request], duration: float,
         ttft_p99=pct["p99"],
         n_starved_requests=sum(starved_per_adapter.values()),
         starved_per_adapter=starved_per_adapter,
+        ttft_samples=[float(t) for t in ttfts],
     )
 
 

@@ -1,0 +1,202 @@
+"""Predictive (model-driven) rebalancing: plan ahead of popularity drift.
+
+The reactive ``RebalancePolicy`` (``repro.serving.rebalance``) waits for
+observed suffering — EWMA imbalance plus a growing backlog — before it
+moves anything, so every phase change of a drifting workload costs a few
+windows of degraded service while the EWMA catches up.  The paper's core
+claim is that an *interpretable placement model* can predict the optimal
+configuration instead of reacting to starvation; this module closes that
+loop at runtime:
+
+  * ``PredictiveRebalancer`` extrapolates the drift tracker's EWMA rates
+    one planning horizon forward (linear trend per adapter), feeds the
+    *forecast* rates through the trained ``ClusterPlacementModel`` to
+    decide how many adapters the fleet should actively plan for (the
+    model's N*), LPT-packs that hot set over the live replicas, and
+    proposes the migrations that realise the plan — before the backlog
+    ever builds.  The cost/benefit veto is inherited unchanged: each
+    move still pays the Fig. 4 load cost against its forecast benefit.
+  * ``plan_initial_placement`` turns one model call into the fleet's
+    *initial* adapter->replica bin-packing (``PlacementRouter.plan``),
+    which ``ServingCluster.run_online`` warms before serving starts —
+    replacing first-touch affinity scatter with the model's plan.
+
+Replication (``Replicate | Unreplicate`` in the plan vocabulary) is
+inherited from the base policy: a single adapter too hot for any one
+replica gets a second home, which migration alone can never achieve.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from .rebalance import Migration, RebalancePolicy
+from .router import PlacementRouter
+
+
+class PredictiveRebalancer(RebalancePolicy):
+    """Model-driven planner over the reactive policy's observation state.
+
+    ``model`` is anything with the ``ClusterPlacementModel.recommend``
+    signature (``recommend(rates, ranks, length_stats, n_replicas)``);
+    ``pool`` and ``length_stats`` describe the workload the model was
+    trained to reason about.  ``forecast_horizon_s`` defaults to two
+    observation windows — far enough ahead to front-run drift, close
+    enough that the linear trend still holds.
+    """
+
+    def __init__(self, router, model, pool: Sequence,
+                 length_stats: Dict[str, float],
+                 load_cost_fn=None,
+                 forecast_horizon_s: Optional[float] = None,
+                 threshold: float = 1.15,
+                 max_moves_per_round: int = 4,
+                 imbalance_patience: int = 1,
+                 **kwargs):
+        super().__init__(router, load_cost_fn=load_cost_fn,
+                         threshold=threshold,
+                         max_moves_per_round=max_moves_per_round, **kwargs)
+        self.model = model
+        self.pool = list(pool)
+        self.length_stats = dict(length_stats)
+        self.forecast_horizon_s = forecast_horizon_s
+        # planning replaces the reactive suffering gate — acting before
+        # queues build is the whole point — at the price of an
+        # occasional noise-triggered move on a stationary fleet (each
+        # bounded by the cost/benefit veto).  Raise ``imbalance_patience``
+        # (consecutive imbalanced rounds required) to trade
+        # responsiveness back for stillness on fleets known stationary.
+        self.imbalance_patience = imbalance_patience
+        self._imbalanced_rounds = 0
+        self._fleet: Dict[int, float] = {}       # uid -> EWMA rate now
+        self._forecast: Dict[int, float] = {}    # uid -> forecast rate
+
+    # ------------------------------------------------------------------ #
+    def observe(self, now: float, window_s: float,
+                served_tokens: Optional[List[float]] = None,
+                backlog: Optional[List[int]] = None) -> None:
+        super().observe(now, window_s, served_tokens=served_tokens,
+                        backlog=backlog)
+        prev = self._fleet
+        self._fleet = {a.uid: self.tracker.adapter_rate(a.uid)
+                       for a in self.pool}
+        h = self.forecast_horizon_s or 2.0 * max(window_s, 1e-9)
+        w = max(window_s, 1e-9)
+        self._forecast = {}
+        for uid, cur in self._fleet.items():
+            trend = (cur - prev.get(uid, cur)) / w
+            self._forecast[uid] = max(cur + trend * h, 0.0)
+
+    # ------------------------------------------------------------------ #
+    def _propose_migrations(self, now: float,
+                            skip: frozenset = frozenset()
+                            ) -> List[Migration]:
+        """Overrides the reactive migration hook — the base ``propose``
+        (replication pass + Replicate-skip coupling) is inherited."""
+        r = self.router
+        live = r.live_replicas()
+        if len(live) < 2 or not self._forecast:
+            return []
+        eligible = [i for i in live if not r.straggler[i]] or live
+
+        # forecast per-replica loads under the *current* homes
+        loads = {i: 0.0 for i in live}
+        home_of: Dict[int, int] = {}
+        for uid, f in self._forecast.items():
+            homes = r.homes(uid)
+            if not homes:
+                continue                 # never routed yet: no home to fix
+            if len(homes) > 1:
+                for h in homes:          # multi-home splits the load
+                    loads[h] += self._norm(h, f / len(homes))
+                continue
+            home_of[uid] = homes[0]
+            loads[homes[0]] += self._norm(homes[0], f)
+        mean = sum(loads.values()) / len(loads)
+        if mean <= 0 or max(loads.values()) <= self.threshold * mean:
+            self.report.n_rounds_balanced += 1
+            self._imbalanced_rounds = 0
+            return []                    # forecast says: stay put
+        self._imbalanced_rounds += 1
+        if self._imbalanced_rounds < self.imbalance_patience:
+            return []                    # one noisy window is not drift
+
+        # model inference on the forecast workload: how many adapters the
+        # fleet should actively plan placements for (the model's N*).
+        # The fleet's scheduling policy is a model feature (it shifts
+        # N*); heterogeneous-policy fleets are summarised by replica 0.
+        rates = [self._forecast.get(a.uid, 0.0) for a in self.pool]
+        ranks = [a.rank for a in self.pool]
+        rec = self.model.recommend(
+            rates, ranks, self.length_stats, n_replicas=len(eligible),
+            sched_policy=r.specs[0].sched_policy)
+        n_hot = min(max(int(rec["served_adapters"]), len(eligible)),
+                    len(self.pool))
+        hot = set(sorted((uid for uid in home_of
+                          if self._forecast[uid] > self.min_adapter_rate),
+                         key=lambda u: (-self._forecast[u], u))[:n_hot])
+
+        # the reactive policy's greedy donor->recipient walk, but on the
+        # *forecast* loads and without the suffering gate: rising
+        # adapters weigh more than fading ones before the queues show
+        # it, and the no-inversion guard keeps the plan from flapping
+        gain_window = self.gain_window_s or max(self._last_window_s, 1e-9)
+        moves: List[Migration] = []
+        for _ in range(self.max_moves):
+            mean = sum(loads.values()) / len(loads)
+            donor = max(live, key=lambda i: (loads[i], -i))
+            recips = [i for i in eligible if i != donor]
+            if not recips or mean <= 0 \
+                    or loads[donor] <= self.threshold * mean:
+                break
+            recip = min(recips, key=lambda i: (loads[i], i))
+            gap = loads[donor] - loads[recip]
+            mig = None
+            for uid in sorted((u for u in hot
+                               if home_of.get(u) == donor
+                               and u not in skip),
+                              key=lambda u: (-self._forecast[u], u)):
+                f = self._forecast[uid]
+                if self._norm(donor, f) + self._norm(recip, f) > gap:
+                    continue             # move would invert the imbalance
+                self.report.n_proposed += 1
+                cost_s = float(self.load_cost_fn(uid))
+                if self._cost_tokens(cost_s, recip, gain_window) \
+                        >= f * gain_window:
+                    self.report.n_declined_cost += 1
+                    continue
+                mig = Migration(adapter=uid, src=donor, dst=recip,
+                                cost_s=cost_s)
+                break
+            if mig is None:
+                break
+            moves.append(mig)
+            f = self._forecast[mig.adapter]
+            loads[donor] -= self._norm(donor, f)
+            loads[recip] += self._norm(recip, f)
+            home_of[mig.adapter] = recip
+        return moves
+
+
+# --------------------------------------------------------------------------- #
+# plan-level initial placement (the model's bin-packing, warmed at t=0)
+# --------------------------------------------------------------------------- #
+
+def plan_initial_placement(model, pool: Sequence,
+                           length_stats: Dict[str, float],
+                           n_replicas: int,
+                           sched_policy: str = "fcfs") -> Dict[int, int]:
+    """One model call -> the fleet's initial adapter->replica packing.
+
+    ``model`` is a ``ClusterPlacementModel`` (its per-node inference view
+    is used, with ``sched_policy`` baked in so per-node capacity is
+    inferred for the fleet's actual scheduler) or any
+    ``PlacementPipeline``-shaped object with ``recommend(rates, ranks,
+    length_stats)``.  The result feeds
+    ``ServingCluster.run_online(initial_placement=...)`` /
+    ``ClusterDigitalTwin.simulate_online(initial_placement=...)``.
+    """
+    pipeline = model.as_node_pipeline(sched_policy=sched_policy) \
+        if hasattr(model, "as_node_pipeline") else model
+    router = PlacementRouter(pipeline, n_replicas)
+    state = router.plan(list(pool), dict(length_stats))
+    return dict(state.assignment)

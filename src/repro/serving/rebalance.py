@@ -17,12 +17,19 @@ policy declines any migration whose cost exceeds its expected benefit
 ``gain_window_s``, converted to seconds through the destination's
 observed service rate).  A cluster with a single live replica, balanced
 load, or only net-negative candidates proposes nothing.
+
+The plan vocabulary goes beyond migration: when one adapter's EWMA rate
+alone exceeds a per-replica share of the fleet's traffic, *no* migration
+can relieve its home (S-LoRA / Punica both observe this), so the policy
+may propose ``Replicate`` — serve the adapter from a second home, with
+the router's weighted multi-home dispatch splitting its traffic — and a
+decay-based ``Unreplicate`` collapses it back once the hotspot cools.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Union
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,12 +42,37 @@ class Migration:
     cost_s: float
 
 
+@dataclasses.dataclass(frozen=True)
+class Replicate:
+    """Serve ``adapter`` from ``dst`` *in addition to* ``src`` (the
+    router's multi-home dispatch then splits its traffic), paying
+    ``cost_s`` (the Fig. 4 load) on the destination."""
+    adapter: int
+    src: int
+    dst: int
+    cost_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Unreplicate:
+    """Collapse ``adapter`` back to single-home by dropping the home on
+    ``rep`` (free: eviction costs nothing)."""
+    adapter: int
+    rep: int
+    cost_s: float = 0.0
+
+
+PlanAction = Union[Migration, Replicate, Unreplicate]
+
+
 @dataclasses.dataclass
 class RebalanceReport:
     n_proposed: int = 0
     n_committed: int = 0
     n_declined_cost: int = 0
     n_rounds_balanced: int = 0
+    n_replications: int = 0
+    n_unreplications: int = 0
 
 
 class AdapterLoadTracker:
@@ -63,7 +95,15 @@ class AdapterLoadTracker:
             for uid in set(cum) | set(rates):
                 delta = cum.get(uid, 0.0) - last.get(uid, 0.0)
                 inst = max(delta, 0.0) / window_s
-                rates[uid] = a * inst + (1 - a) * rates.get(uid, 0.0)
+                if uid in rates:
+                    rates[uid] = a * inst + (1 - a) * rates[uid]
+                elif inst > 0.0:
+                    # cold-start seed: a first observation IS the best
+                    # estimate.  Blending it toward the zero init would
+                    # underestimate a freshly migrated/replicated
+                    # adapter's load for several windows and let the
+                    # rebalancer bounce it right back.
+                    rates[uid] = inst
             self._last[rep] = dict(cum)
 
     def move(self, adapter: int, src: int, dst: int) -> None:
@@ -78,6 +118,10 @@ class AdapterLoadTracker:
 
     def replica_rate(self, rep: int) -> float:
         return sum(self.rate[rep].values())
+
+    def adapter_rate(self, adapter: int) -> float:
+        """Fleet-wide EWMA rate of one adapter (all homes summed)."""
+        return sum(r.get(adapter, 0.0) for r in self.rate)
 
 
 class RebalancePolicy:
@@ -94,6 +138,15 @@ class RebalancePolicy:
       4. benefit = EWMA tokens/s * gain_window_s; cost = load_cost_fn
          seconds * recipient's observed tokens/s.  Decline when
          ``cost >= benefit`` (net-negative migration).
+
+    ``replicate=True`` additionally arms the hot-adapter replication
+    trigger: an adapter whose fleet-wide EWMA rate exceeds
+    ``replicate_factor`` x the per-replica traffic share (total fleet
+    rate / live replicas) while its home queue suffers cannot be helped
+    by migration (moving it just moves the hotspot) — it gets a second
+    home instead.  A replicated adapter whose rate decays below
+    ``unreplicate_factor`` x that share for ``unreplicate_patience``
+    consecutive rounds collapses back to single-home.
     """
 
     def __init__(self, router, load_cost_fn: Optional[
@@ -102,7 +155,10 @@ class RebalancePolicy:
             gain_window_s: Optional[float] = None,
             max_moves_per_round: int = 2,
             min_adapter_rate: float = 1e-6,
-            min_backlog: int = 4, backlog_ratio: float = 2.0):
+            min_backlog: int = 4, backlog_ratio: float = 2.0,
+            replicate: bool = False, replicate_factor: float = 1.0,
+            unreplicate_factor: float = 0.5,
+            unreplicate_patience: int = 2):
         self.router = router
         self.load_cost_fn = load_cost_fn or (lambda uid: 0.02)
         self.threshold = threshold
@@ -111,6 +167,12 @@ class RebalancePolicy:
         self.min_adapter_rate = min_adapter_rate
         self.min_backlog = min_backlog
         self.backlog_ratio = backlog_ratio
+        self.replicate = replicate
+        self.replicate_factor = replicate_factor
+        self.unreplicate_factor = unreplicate_factor
+        self.unreplicate_patience = unreplicate_patience
+        # adapter uid -> consecutive cold rounds (unreplicate decay)
+        self._cold_rounds: Dict[int, int] = {}
         self.tracker = AdapterLoadTracker(router.n_replicas, alpha=alpha)
         self.report = RebalanceReport()
         # observed per-replica service rate (tokens/s EWMA) for the
@@ -145,7 +207,21 @@ class RebalancePolicy:
     def _norm(self, rep: int, rate: float) -> float:
         return rate / max(self.router.specs[rep].kv_capacity_tokens, 1)
 
-    def propose(self, now: float) -> List[Migration]:
+    def propose(self, now: float) -> List[PlanAction]:
+        actions: List[PlanAction] = []
+        if self.replicate:
+            actions.extend(self._propose_replication(now))
+        # an adapter with a Replicate pending this round must not also be
+        # migrated: the migration's _drop_home would dissolve the brand-new
+        # multi-home registration right after the loop executes it
+        skip = frozenset(a.adapter for a in actions
+                         if isinstance(a, Replicate))
+        actions.extend(self._propose_migrations(now, skip=skip))
+        return actions
+
+    def _propose_migrations(self, now: float,
+                            skip: frozenset = frozenset()
+                            ) -> List[Migration]:
         r = self.router
         live = [i for i in r.live_replicas()]
         if len(live) < 2:
@@ -174,7 +250,7 @@ class RebalancePolicy:
                 self.report.n_rounds_balanced += 1
                 break
             gap = loads[donor] - loads[recip]
-            mig = self._pick(donor, recip, gap, gain_window)
+            mig = self._pick(donor, recip, gap, gain_window, skip=skip)
             if mig is None:
                 break
             moved.append(mig)
@@ -184,7 +260,8 @@ class RebalancePolicy:
         return moved
 
     def _pick(self, donor: int, recip: int, gap: float,
-              gain_window: float) -> Optional[Migration]:
+              gain_window: float,
+              skip: frozenset = frozenset()) -> Optional[Migration]:
         r = self.router
         rates = self.tracker.rate[donor]
         # hottest first; only adapters the router believes resident on the
@@ -192,6 +269,8 @@ class RebalancePolicy:
         cands = sorted(
             (uid for uid in r.resident[donor]
              if uid not in r.resident[recip]
+             and uid not in r.replicated    # multi-home: split, not moved
+             and uid not in skip            # Replicate pending this round
              and rates.get(uid, 0.0) > self.min_adapter_rate),
             key=lambda uid: (-rates.get(uid, 0.0), uid))
         for uid in cands:
@@ -204,20 +283,124 @@ class RebalancePolicy:
             self.report.n_proposed += 1
             cost_s = float(self.load_cost_fn(uid))
             benefit_tokens = rate * gain_window
-            srv = self._service_rate[recip]
-            if srv <= 0:
-                vals = [v for v in self._service_rate if v > 0]
-                srv = sum(vals) / len(vals) if vals else 0.0
-            cost_tokens = cost_s * srv if srv > 0 \
-                else (math.inf if cost_s > gain_window else 0.0)
-            if cost_tokens >= benefit_tokens:
+            if self._cost_tokens(cost_s, recip, gain_window) \
+                    >= benefit_tokens:
                 self.report.n_declined_cost += 1
                 continue                      # net-negative migration
             return Migration(adapter=uid, src=donor, dst=recip,
                              cost_s=cost_s)
         return None
 
-    def commit(self, mig: Migration) -> None:
-        """The online loop executed this migration; update the tracker."""
-        self.tracker.move(mig.adapter, mig.src, mig.dst)
+    def _cost_tokens(self, cost_s: float, dst: int,
+                     gain_window: float) -> float:
+        """Convert a Fig. 4 load cost (seconds) into tokens through the
+        destination's observed service rate (fleet mean fallback)."""
+        srv = self._service_rate[dst]
+        if srv <= 0:
+            vals = [v for v in self._service_rate if v > 0]
+            srv = sum(vals) / len(vals) if vals else 0.0
+        if srv > 0:
+            return cost_s * srv
+        return math.inf if cost_s > gain_window else 0.0
+
+    # ------------------------------------------------------------------ #
+    # hot-adapter replication (one adapter too hot for any single home)
+    # ------------------------------------------------------------------ #
+    def _propose_replication(self, now: float) -> List[PlanAction]:
+        r = self.router
+        live = r.live_replicas()
+        out: List[PlanAction] = []
+        total = sum(self.tracker.replica_rate(i) for i in live)
+        if not live or total <= 0:
+            return out
+        share = total / len(live)
+        gain_window = self.gain_window_s or max(self._last_window_s, 1e-9)
+
+        # decay-based unreplicate first (frees a slot before replicating)
+        for uid in sorted(r.replicated):
+            homes = [h for h in sorted(r.replicated[uid]) if r.alive[h]]
+            if len(homes) < 2:
+                continue
+            if self.tracker.adapter_rate(uid) \
+                    < self.unreplicate_factor * share:
+                c = self._cold_rounds.get(uid, 0) + 1
+                self._cold_rounds[uid] = c
+                if c >= self.unreplicate_patience:
+                    # drop the colder home (deterministic tie-break);
+                    # the counter is cleared in commit(), not here — a
+                    # failed engine evict (adapter pinned at the epoch
+                    # boundary) must retry next round, not restart the
+                    # whole decay clock
+                    drop = min(homes, key=lambda h: (
+                        self.tracker.rate[h].get(uid, 0.0), -h))
+                    self.report.n_proposed += 1
+                    out.append(Unreplicate(adapter=uid, rep=drop))
+            else:
+                self._cold_rounds.pop(uid, None)
+
+        if len(live) < 2:
+            return out
+        # hottest single-home adapter past the per-replica share whose
+        # home is actually suffering gets a second home
+        cands = sorted(
+            ((self.tracker.adapter_rate(uid), uid)
+             for uid in {u for rep in live for u in r.resident[rep]}
+             if uid not in r.replicated),
+            key=lambda t: (-t[0], t[1]))
+        for rate, uid in cands:
+            if rate <= self.replicate_factor * share:
+                break                          # sorted: nothing hotter left
+            homes = r.homes(uid)
+            if len(homes) != 1:
+                continue
+            home = homes[0]
+            if self._backlog[home] < self.min_backlog:
+                continue                       # hot but not suffering
+            others = [i for i in live
+                      if i != home and not r.straggler[i]] or \
+                     [i for i in live if i != home]
+            if not others:
+                continue
+            dst = min(others, key=lambda i: (
+                self._norm(i, self.tracker.replica_rate(i)), i))
+            self.report.n_proposed += 1
+            cost_s = float(self.load_cost_fn(uid))
+            # the second home absorbs about half the adapter's traffic
+            benefit_tokens = 0.5 * rate * gain_window
+            if self._cost_tokens(cost_s, dst, gain_window) \
+                    >= benefit_tokens:
+                self.report.n_declined_cost += 1
+                continue
+            out.append(Replicate(adapter=uid, src=home, dst=dst,
+                                 cost_s=cost_s))
+            break                              # at most one new home/round
+        return out
+
+    def commit(self, act: PlanAction) -> None:
+        """The online loop executed this plan action; update the tracker.
+
+        ``n_committed`` counts every executed plan action (the invariant
+        ``n_proposed ~ n_committed + n_declined_cost`` holds with
+        replication armed); ``n_replications``/``n_unreplications`` are
+        the per-type breakdowns."""
         self.report.n_committed += 1
+        if isinstance(act, Replicate):
+            # the new home has no routed history yet; the tracker's
+            # cold-start seeding picks up its traffic split next window.
+            # A decay counter left over from a previous multi-home spell
+            # (dissolved by failure/migration) must not shortchange this
+            # fresh replication's patience window.
+            self._cold_rounds.pop(act.adapter, None)
+            self.report.n_replications += 1
+        elif isinstance(act, Unreplicate):
+            # fold the dropped home's learned rate into the survivor
+            rate = self.tracker.rate[act.rep].pop(act.adapter, 0.0)
+            left = [h for h in self.router.homes(act.adapter)
+                    if h != act.rep]
+            if left:
+                dst = self.tracker.rate[left[0]]
+                dst[act.adapter] = dst.get(act.adapter, 0.0) + rate
+            self._cold_rounds.pop(act.adapter, None)
+            self.report.n_unreplications += 1
+        else:
+            self.tracker.move(act.adapter, act.src, act.dst)

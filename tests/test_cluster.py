@@ -131,6 +131,45 @@ def test_cluster_metrics_starvation_rule_matches_single_engine():
     assert not ok.starved and bad.starved
 
 
+def test_cluster_ttft_percentiles_exact_from_pooled_samples():
+    """Regression: cluster TTFT p50/p99 must be computed from the pooled
+    raw samples, not a finished-weighted mean of per-replica percentiles
+    — the mean is provably wrong when replicas see skewed distributions."""
+    from repro.serving.metrics import ttft_percentiles
+
+    a_samples = [0.01] * 9 + [2.0]     # replica A: fast, one straggler
+    b_samples = [1.0] * 30             # replica B: uniformly slow
+
+    def mk(samples, fin):
+        pct = ttft_percentiles(samples)
+        return ServingMetrics(
+            throughput=100.0, itl=0.02, ttft=float(np.mean(samples)),
+            ideal_throughput=100.0, duration=10.0, n_finished=fin,
+            n_preemptions=0, ttft_p50=pct["p50"], ttft_p99=pct["p99"],
+            ttft_samples=list(samples))
+
+    m = ClusterMetrics.aggregate([mk(a_samples, 10), mk(b_samples, 30)])
+    pooled = ttft_percentiles(a_samples + b_samples)
+    assert m.ttft_p50 == pooled["p50"]
+    assert m.ttft_p99 == pooled["p99"]
+    # the old weighted-mean approximation lands far from the truth here
+    weighted_p50 = (10 * ttft_percentiles(a_samples)["p50"]
+                    + 30 * ttft_percentiles(b_samples)["p50"]) / 40
+    assert abs(m.ttft_p50 - weighted_p50) > 0.1
+
+
+def test_cluster_ttft_percentiles_fallback_without_samples():
+    """Hand-built metrics without raw samples keep the weighted-mean
+    approximation instead of silently reporting zeros."""
+    a = _metrics(100.0, 10.0, 100.0, fin=30)
+    b = _metrics(100.0, 10.0, 100.0, fin=10)
+    a.ttft_p50, a.ttft_p99 = 0.1, 0.5
+    b.ttft_p50, b.ttft_p99 = 0.3, 0.9
+    m = ClusterMetrics.aggregate([a, b])
+    assert m.ttft_p50 == pytest.approx((0.1 * 30 + 0.3 * 10) / 40)
+    assert m.ttft_p99 == pytest.approx((0.5 * 30 + 0.9 * 10) / 40)
+
+
 # --------------------------------------------------------------------- #
 # cluster of real engines
 # --------------------------------------------------------------------- #

@@ -222,6 +222,61 @@ def test_cluster_online_equivalence_replica_failure():
     assert fast.metrics.n_finished == len(reqs)
 
 
+def _hotspot_run(est, fast, failures=()):
+    """Single-hot-adapter run under hard affinity with replication armed
+    — exercises Replicate (and the failure path: one home killed)."""
+    from repro.serving.request import Adapter
+    pool = make_adapter_pool(4, [8], [0.02])
+    pool[0] = Adapter(uid=0, rank=8, rate=10.0)
+    spec = WorkloadSpec(adapters=pool, dataset="medium", horizon=40.0,
+                        seed=11)
+    reqs = generate_requests(spec)
+    twin = ClusterDigitalTwin(est, mode="full", max_running=64, fast=fast)
+    router = ClusterRouter(
+        twin.specs_from_slots([4, 4], mean_rank=8.0),
+        policy="affinity", overload_factor=1e9, slack=1e9)
+    reb = twin.rebalancer(spec, router, replicate=True)
+    return twin.simulate_online(spec, router, requests=reqs, epoch=5.0,
+                                rebalance=False, rebalancer=reb,
+                                failures=list(failures))
+
+
+def test_cluster_online_equivalence_with_replication():
+    """The twin-vs-engine equivalence contract extends to runs with
+    Replicate plan actions: identical events, identical metrics."""
+    est = mk_est()
+    legacy = _hotspot_run(est, fast=False)
+    fast = _hotspot_run(est, fast=True)
+    assert len(legacy.online.replications) == \
+        len(fast.online.replications) >= 1
+    assert [(type(a).__name__, a.adapter) for a in legacy.online.migrations] \
+        == [(type(a).__name__, a.adapter) for a in fast.online.migrations]
+    for f in EXACT_FIELDS:
+        assert getattr(legacy.metrics, f) == getattr(fast.metrics, f), f
+    # pooled raw TTFT samples agree as multisets (exact percentiles feed
+    # off them, so they must match bitwise after sorting)
+    assert sorted(t for m in legacy.metrics.per_replica
+                  for t in m.ttft_samples) == \
+        sorted(t for m in fast.metrics.per_replica for t in m.ttft_samples)
+
+
+def test_cluster_online_equivalence_replication_home_killed():
+    """Kill one home of the replicated adapter mid-run: the single-home
+    degrade must replay identically on both engine implementations."""
+    est = mk_est()
+    kill = [FailureEvent(replica=1, at=25.0)]
+    legacy = _hotspot_run(est, fast=False, failures=kill)
+    fast = _hotspot_run(est, fast=True, failures=kill)
+    assert len(legacy.online.replications) == \
+        len(fast.online.replications) >= 1
+    assert fast.online.failures_detected == legacy.online.failures_detected
+    assert fast.online.n_rerouted == legacy.online.n_rerouted
+    assert fast.router_summary["replicated"] == \
+        legacy.router_summary["replicated"] == {}
+    for f in EXACT_FIELDS:
+        assert getattr(legacy.metrics, f) == getattr(fast.metrics, f), f
+
+
 def test_placement_search_fast_matches_legacy():
     est = mk_est()
     pool = make_adapter_pool(16, [8, 16], [0.3, 0.1])
