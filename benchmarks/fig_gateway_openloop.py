@@ -1,0 +1,112 @@
+"""Open-loop gateway vs closed-loop engine under the same offered load.
+
+Ours (no paper counterpart — the paper's pipeline is closed-loop; this
+figure gates the async serving front-end, ROADMAP item 1): the same
+overloaded multi-adapter trace is served three ways on identical
+engines:
+
+* ``closed``    — ``ServingEngine.run`` (every request exists up front);
+* ``open``      — the ``AsyncGateway`` driven by the trace replayed as
+                  open-loop arrivals, admission control off.  This arm
+                  doubles as the determinism guard: its end-state
+                  metrics must match ``closed`` exactly;
+* ``admission`` — the same gateway with the fitted-estimator admission
+                  controller armed.  Shedding keeps the queue bounded,
+                  so requests that do get admitted reach their first
+                  token — the acceptance gate is strictly fewer starved
+                  requests than the no-admission arm (which must starve,
+                  or the overload point is vacuous).
+
+All three arms stop at the same virtual horizon without draining (an
+overloaded open-loop system never drains; a drained run cannot starve).
+"""
+from __future__ import annotations
+
+import asyncio
+
+from .common import CsvOut, fitted_estimators, is_smoke, profile
+from repro.core import (WorkloadSpec, generate_requests, make_adapter_pool,
+                        replay_trace)
+from repro.serving import (AsyncGateway, EngineConfig, ServingEngine,
+                           ServingMetrics, SyntheticExecutor,
+                           estimator_admission)
+
+
+def gateway_config(smoke: bool) -> dict:
+    if smoke:
+        return dict(n_adapters=12, slots=4, max_running=24, rate=2.0,
+                    horizon=15.0, slo_budget=40.0, seed=5)
+    return dict(n_adapters=16, slots=4, max_running=24, rate=2.0,
+                horizon=40.0, slo_budget=60.0, seed=11)
+
+
+def build_engine(cfg: dict) -> ServingEngine:
+    p = profile()
+    ranks = {i: 8 for i in range(cfg["n_adapters"])}
+    ex = SyntheticExecutor(p, ranks, slots=cfg["slots"],
+                          n_adapters=cfg["n_adapters"], seed=cfg["seed"])
+    return ServingEngine(EngineConfig(
+        kv_capacity_tokens=p.kv_capacity(cfg["slots"], 8),
+        adapter_slots=cfg["slots"], max_running=cfg["max_running"]),
+        ex)
+
+
+def fmt(m: ServingMetrics, extra: str = "") -> str:
+    return (f"thpt={m.throughput:.0f};finished={m.n_finished};"
+            f"starved_reqs={m.n_starved_requests};"
+            f"ttft_p50={m.ttft_p50 * 1e3:.0f}ms;"
+            f"ttft_p99={m.ttft_p99 * 1e3:.0f}ms" + extra)
+
+
+def main(out: CsvOut) -> None:
+    cfg = gateway_config(is_smoke())
+    pool = make_adapter_pool(cfg["n_adapters"], [8], [cfg["rate"]])
+    spec = WorkloadSpec(adapters=pool, dataset="medium",
+                        horizon=cfg["horizon"], seed=cfg["seed"])
+    trace = generate_requests(spec)
+    horizon = cfg["horizon"]
+
+    closed = build_engine(cfg).run(list(replay_trace(trace)),
+                                   horizon=horizon)
+    out.row("closed", 1.0, fmt(closed))
+
+    gw_open = AsyncGateway(build_engine(cfg))
+    open_rep = asyncio.run(gw_open.run(replay_trace(trace),
+                                       duration=horizon, drain=False))
+    out.row("open", 1.0, fmt(open_rep.serving))
+
+    adm = estimator_admission(fitted_estimators(), spec.length_stats(),
+                              cfg["slo_budget"])
+    gw_adm = AsyncGateway(build_engine(cfg), admission=adm)
+    adm_rep = asyncio.run(gw_adm.run(replay_trace(trace),
+                                     duration=horizon, drain=False))
+    out.row("admission", 1.0,
+            fmt(adm_rep.serving,
+                f";rejected={adm_rep.gateway.n_rejected}"))
+
+    # determinism guard: the no-admission gateway is the closed loop
+    if (open_rep.serving.n_finished != closed.n_finished
+            or open_rep.serving.n_starved_requests
+            != closed.n_starved_requests
+            or sorted(open_rep.serving.ttft_samples)
+            != sorted(closed.ttft_samples)):
+        raise RuntimeError(
+            "open-loop gateway diverged from the closed-loop engine on "
+            f"the same trace: finished {open_rep.serving.n_finished} vs "
+            f"{closed.n_finished}, starved "
+            f"{open_rep.serving.n_starved_requests} vs "
+            f"{closed.n_starved_requests}")
+    # acceptance gate: admission control must shed, not just reject
+    if open_rep.serving.n_starved_requests == 0:
+        raise RuntimeError("overload point did not starve without "
+                           "admission control — the comparison is "
+                           "vacuous")
+    if adm_rep.gateway.n_rejected == 0:
+        raise RuntimeError("admission controller never rejected at "
+                           "overload — budget is too loose")
+    if (adm_rep.serving.n_starved_requests
+            >= open_rep.serving.n_starved_requests):
+        raise RuntimeError(
+            "admission control did not reduce starvation: "
+            f"{adm_rep.serving.n_starved_requests} >= "
+            f"{open_rep.serving.n_starved_requests} starved requests")

@@ -29,6 +29,7 @@ BENCHES = (
     "fig7_slots_and_dynamic",
     "fig9_scale_384",
     "fig_cluster_scaling",
+    "fig_gateway_openloop",
     "fig_rebalancing",
     "fig_sched_policies",
     "fig_twin_speed",
@@ -43,6 +44,7 @@ SMOKE_BENCHES = (
     "fig2_loaded_adapters",
     "fig4_loading",
     "fig_cluster_scaling",
+    "fig_gateway_openloop",
     "fig_rebalancing",
     "fig_sched_policies",
     "fig_twin_speed",

@@ -5,10 +5,13 @@ LLM-Adapter Serving" (Agullo et al., 2025) and grows it to a fleet.
 Three layers (see docs/architecture.md):
 
   * engine       — ``repro.serving``: continuous-batching multi-LoRA
-                   engine (scheduler, paged KV, adapter slots) plus the
-                   cluster: ``ClusterRouter`` routing policies, the
-                   epoch-driven online loop with heartbeats/failover,
-                   and the EWMA adapter rebalancer;
+                   engine (scheduler, paged KV, adapter slots) with two
+                   front-ends: the async open-loop gateway
+                   (``repro.serving.gateway``: live arrivals, SSE
+                   streaming, admission control, an OpenAI-style HTTP
+                   binding) and the cluster (``ClusterRouter`` routing
+                   policies, the epoch-driven online loop with
+                   heartbeats/failover, the EWMA adapter rebalancer);
   * digital twin — ``repro.core``: Eq. (1) estimators fitted from
                    engine benchmarks, single-node and cluster twins,
                    placement search, interpretable placement models;

@@ -21,5 +21,6 @@ from .dataset import (FEATURE_NAMES, PAPER_RANKS, PAPER_RATES,  # noqa
                       label_scenarios, scenario_grid)
 from .workload import (DATASETS, DriftPhase, WorkloadSpec,  # noqa
                        generate_drifting_requests, generate_requests,
-                       make_adapter_pool, resample_requests,
-                       rotating_hot_phases)
+                       load_trace, make_adapter_pool, open_loop_arrivals,
+                       replay_trace, resample_requests,
+                       rotating_hot_phases, save_trace)

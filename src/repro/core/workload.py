@@ -8,8 +8,11 @@ mean / P75 of cleaned ShareGPT) or a ShareGPT-like lognormal sampler.
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import json
 import math
-from typing import Dict, List, Sequence, Tuple
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -134,6 +137,74 @@ def make_adapter_pool(n: int, ranks: Sequence[int], rates: Sequence[float],
     return [Adapter(uid=i, rank=ranks[i % len(ranks)],
                     rate=rates[i % len(rates)], location=location)
             for i in range(n)]
+
+
+# --------------------------------------------------------------------------- #
+# open-loop arrival drivers (the async gateway's inputs)
+# --------------------------------------------------------------------------- #
+
+def open_loop_arrivals(pool: Sequence[Adapter], dataset: str = "medium",
+                       horizon: float = math.inf, seed: int = 0,
+                       start_uid: int = 0) -> Iterator[Request]:
+    """Lazy merged per-adapter Poisson arrival process.
+
+    Unlike ``generate_requests`` (which materializes a closed horizon up
+    front), this yields requests one at a time in arrival order via a
+    heap merge of the per-adapter exponential clocks — so it works with
+    an unbounded ``horizon`` and never holds the stream in memory.  The
+    gateway consumes it directly.  Deterministic per seed; note the RNG
+    draw order differs from ``generate_requests``, so the two produce
+    different (equally valid) streams for the same seed.
+    """
+    rng = np.random.default_rng(seed)
+    heap: List[Tuple[float, int, float]] = []
+    for ad in pool:
+        if ad.rate <= 0:
+            continue
+        heapq.heappush(
+            heap, (rng.exponential(1.0 / ad.rate), ad.uid, ad.rate))
+    uid = start_uid
+    while heap:
+        t, adapter_uid, rate = heapq.heappop(heap)
+        if t >= horizon:
+            continue                     # this adapter's clock is done
+        ins, outs = _sample_lengths(dataset, 1, rng)
+        yield Request(uid=uid, adapter=adapter_uid, arrival=float(t),
+                      prompt_len=int(ins[0]),
+                      output_len=max(int(outs[0]), 1))
+        uid += 1
+        heapq.heappush(
+            heap, (t + rng.exponential(1.0 / rate), adapter_uid, rate))
+
+
+def replay_trace(requests: Iterable[Request]) -> Iterator[Request]:
+    """Trace-replay driver: yield *fresh* copies (generation progress
+    reset) of a recorded request stream, in arrival order.  Feeding the
+    same trace to a closed-loop ``ServingEngine.run`` and to the gateway
+    is the deterministic-equivalence guard in tests/test_gateway.py."""
+    for r in sorted(requests, key=lambda r: (r.arrival, r.uid)):
+        yield Request(uid=r.uid, adapter=r.adapter, arrival=r.arrival,
+                      prompt_len=r.prompt_len, output_len=r.output_len)
+
+
+def save_trace(path: Union[str, Path],
+               requests: Iterable[Request]) -> None:
+    """Persist an arrival trace as JSON (only the immutable request
+    identity — uid/adapter/arrival/lengths — not serving progress)."""
+    rows = [{"uid": r.uid, "adapter": r.adapter, "arrival": r.arrival,
+             "prompt_len": r.prompt_len, "output_len": r.output_len}
+            for r in requests]
+    Path(path).write_text(json.dumps(rows))
+
+
+def load_trace(path: Union[str, Path]) -> List[Request]:
+    """Load a ``save_trace`` JSON back into replayable requests."""
+    rows = json.loads(Path(path).read_text())
+    return [Request(uid=int(r["uid"]), adapter=int(r["adapter"]),
+                    arrival=float(r["arrival"]),
+                    prompt_len=int(r["prompt_len"]),
+                    output_len=max(int(r["output_len"]), 1))
+            for r in rows]
 
 
 # --------------------------------------------------------------------------- #

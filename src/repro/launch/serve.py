@@ -17,8 +17,10 @@ from ..serving import EngineConfig, JaxExecutor, ServingEngine
 from ..serving.policy import SCHED_POLICIES
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    """The CLI surface (exposed so tools/check_docs.py can cross-check
+    documented flags against the real parser)."""
+    ap = argparse.ArgumentParser(prog="python -m repro.launch.serve")
     ap.add_argument("--arch", default="phi4-mini-3.8b")
     ap.add_argument("--adapters", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
@@ -30,7 +32,11 @@ def main() -> None:
     ap.add_argument("--sched-policy", default="fcfs",
                     choices=sorted(SCHED_POLICIES),
                     help="admission/preemption scheduling policy")
-    args = ap.parse_args()
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
 
     cfg = get_reduced(args.arch)
     model = Model(cfg, ShardingPlan(mode="decode"))

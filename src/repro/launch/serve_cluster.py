@@ -210,8 +210,11 @@ def run_once(args, policy: str, verbose: bool = True) -> ClusterMetrics:
     return metrics
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
+    """The CLI surface (exposed so tools/check_docs.py can cross-check
+    documented flags against the real parser)."""
     ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.serve_cluster",
         description="serve a multi-adapter workload on a replica cluster")
     ap.add_argument("--replicas", type=int, default=2)
     ap.add_argument("--adapters", type=int, default=24)
@@ -265,7 +268,11 @@ def main() -> None:
     ap.add_argument("--straggler-factor", type=float, default=0.0,
                     help="flag replicas slower than FACTOR x fleet "
                          "median step time (0 = off)")
-    args = ap.parse_args()
+    return ap
+
+
+def main() -> None:
+    args = build_parser().parse_args()
 
     if args.compare_policies:
         for policy in sorted(POLICIES):

@@ -1,0 +1,150 @@
+"""Open-loop gateway launcher: async serving front-end over one engine
+replica (synthetic executor), fed by per-adapter Poisson traffic or a
+recorded trace.
+
+Driven mode (default — as fast as the virtual clock allows):
+
+    python -m repro.launch.serve_gateway --adapters 8 --rate 0.5 \\
+        --duration 30
+    python -m repro.launch.serve_gateway --rate 2.0 --duration 30 \\
+        --slo-budget 20                  # arm admission control
+    python -m repro.launch.serve_gateway --record-trace /tmp/trace.json
+    python -m repro.launch.serve_gateway --trace /tmp/trace.json
+
+Live HTTP mode (OpenAI-style /v1/completions on localhost):
+
+    python -m repro.launch.serve_gateway --http 8080 --duration 60 \\
+        --time-scale 10
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+
+from ..core.workload import (WorkloadSpec, load_trace, make_adapter_pool,
+                             open_loop_arrivals, replay_trace, save_trace)
+from ..serving import (AsyncGateway, EngineConfig, GatewayHTTPServer,
+                       HardwareProfile, ServingEngine, SyntheticExecutor,
+                       estimator_admission)
+from ..serving.policy import SCHED_POLICIES
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """The CLI surface (exposed so tools/check_docs.py can cross-check
+    documented flags against the real parser)."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.serve_gateway",
+        description="open-loop async serving gateway over one engine")
+    ap.add_argument("--adapters", type=int, default=8)
+    ap.add_argument("--rank", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="per-adapter Poisson arrival rate (req/s)")
+    ap.add_argument("--dataset", default="medium")
+    ap.add_argument("--duration", type=float, default=30.0,
+                    help="arrival horizon (virtual s); admitted work "
+                         "drains past it")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--kv-tokens", type=int, default=0,
+                    help="KV capacity override (0 = hardware profile)")
+    ap.add_argument("--max-running", type=int, default=256)
+    ap.add_argument("--sched-policy", default="fcfs",
+                    choices=sorted(SCHED_POLICIES))
+    ap.add_argument("--slo-budget", type=float, default=0.0,
+                    help="admission control: reject when queue_depth x "
+                         "predicted service time exceeds this many "
+                         "seconds (0 = admit everything)")
+    ap.add_argument("--trace", default="",
+                    help="replay a recorded trace instead of Poisson "
+                         "arrivals (see --record-trace)")
+    ap.add_argument("--record-trace", default="", metavar="PATH",
+                    help="save the served arrival stream as JSON for "
+                         "later --trace replay")
+    ap.add_argument("--http", type=int, default=0, metavar="PORT",
+                    help="live mode: serve OpenAI-style /v1/completions "
+                         "on this port for --duration wall-clock "
+                         "seconds (0 = driven mode)")
+    ap.add_argument("--time-scale", type=float, default=1.0,
+                    help="live mode: virtual seconds per wall second")
+    return ap
+
+
+def build_gateway(args) -> AsyncGateway:
+    profile = HardwareProfile()
+    ranks = {i: args.rank for i in range(args.adapters)}
+    executor = SyntheticExecutor(profile, ranks, slots=args.slots,
+                                 n_adapters=args.adapters, seed=args.seed)
+    kv = args.kv_tokens or profile.kv_capacity(args.slots, args.rank)
+    engine = ServingEngine(EngineConfig(
+        kv_capacity_tokens=kv, adapter_slots=args.slots,
+        max_running=args.max_running, sched_policy=args.sched_policy),
+        executor)
+    admission = None
+    if args.slo_budget > 0:
+        from ..core import collect_benchmark, collect_memmax, fit_estimators
+        est = fit_estimators(
+            collect_benchmark(executor, args.slots, args.adapters, ranks),
+            collect_memmax(profile), args.slots, args.adapters)
+        pool = make_adapter_pool(args.adapters, [args.rank], [args.rate])
+        stats = WorkloadSpec(adapters=pool,
+                             dataset=args.dataset).length_stats()
+        admission = estimator_admission(est, stats, args.slo_budget)
+    return AsyncGateway(engine, admission=admission,
+                        time_scale=args.time_scale)
+
+
+def _print_report(report) -> None:
+    s = report.summary()
+    print(f"[gateway] duration={s['duration_s']:.1f}s virtual | "
+          f"throughput={s['throughput_tok_s']:.1f} tok/s | "
+          f"ttft p50={s['ttft_p50_ms']:.1f}ms "
+          f"p99={s['ttft_p99_ms']:.1f}ms | "
+          f"finished={s['n_finished']} starved={s['n_starved']} | "
+          f"admitted={s['n_admitted']} rejected={s['n_rejected']} | "
+          f"streamed_tokens={s['n_streamed_tokens']}")
+    if s["rejected_per_adapter"]:
+        worst = sorted(s["rejected_per_adapter"].items(),
+                       key=lambda kv: -kv[1])[:5]
+        print("  rejections by adapter: "
+              + ", ".join(f"{a}:{c}" for a, c in worst))
+
+
+async def _run_driven(args, gateway: AsyncGateway):
+    if args.trace:
+        arrivals = replay_trace(load_trace(args.trace))
+    else:
+        pool = make_adapter_pool(args.adapters, [args.rank], [args.rate])
+        arrivals = open_loop_arrivals(pool, dataset=args.dataset,
+                                      horizon=args.duration,
+                                      seed=args.seed)
+    report = await gateway.run(arrivals, duration=args.duration)
+    if args.record_trace:
+        save_trace(args.record_trace, gateway.trace)
+        print(f"recorded {len(gateway.trace)} arrivals -> "
+              f"{args.record_trace}")
+    return report
+
+
+async def _run_live(args, gateway: AsyncGateway):
+    await gateway.start()
+    server = await GatewayHTTPServer(gateway, port=args.http).start()
+    print(f"serving http://127.0.0.1:{server.port}/v1/completions "
+          f"for {args.duration:.0f}s wall "
+          f"(x{gateway.time_scale:g} virtual)")
+    try:
+        await asyncio.sleep(args.duration)
+    finally:
+        await server.stop()
+    return await gateway.shutdown()
+
+
+def main() -> None:
+    args = build_parser().parse_args()
+    gateway = build_gateway(args)
+    runner = _run_live if args.http else _run_driven
+    report = asyncio.run(runner(args, gateway))
+    _print_report(report)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,3 +19,7 @@ from .rebalance import (AdapterLoadTracker, Migration,  # noqa
                         Replicate, Unreplicate)
 from .predictive import (PredictiveRebalancer,  # noqa
                          plan_initial_placement)
+from .gateway import (AdmissionControl, AsyncGateway, Completion,  # noqa
+                      CompletionStream, GatewayHTTPServer, GatewayMetrics,
+                      GatewayReport, Rejected, completion_chunk,
+                      estimator_admission, sse_format)

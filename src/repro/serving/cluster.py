@@ -31,6 +31,11 @@ resident adapters between replicas when load drifts.
 ``repro.core.cluster_twin.ClusterDigitalTwin`` runs the *same router and
 loop* over estimator-backed engines so cluster-level placement can be
 labelled offline exactly as the paper does for one GPU.
+
+The epoch loop is one of two front-ends over the engines' resumable
+surface — the other is the open-loop async gateway
+(``repro.serving.gateway``), which admits live arrivals one by one and
+streams tokens instead of serving pre-generated windows.
 """
 from __future__ import annotations
 

@@ -9,19 +9,25 @@ replicates: identical scheduling semantics, real (measured or
 hidden-profile) step times.
 
 The loop is *resumable*: ``submit()`` enqueues arrivals, ``run_until()``
-advances the virtual clock to a bound and returns (the cluster's online
-epoch loop interleaves replicas this way), ``finalize()`` summarizes.
-``run()`` composes the three and keeps the original single-shot
-semantics.  Fault-tolerance hooks: ``drain()`` pulls every unfinished
-request off a dead replica for re-routing; ``preload_adapter()`` /
-``evict_adapter()`` let a rebalancer migrate adapter residency between
-replicas, charging the migration's load cost to this replica's clock.
+advances the virtual clock to a bound and returns, ``finalize()``
+summarizes.  Two front-ends drive the resumable surface: the cluster's
+epoch loop (``ServingCluster.run_online`` interleaves replicas window by
+window) and the open-loop async gateway
+(``repro.serving.gateway.AsyncGateway`` submits arrivals as they happen
+and advances the engine between them, streaming tokens through the
+``on_token`` hook).  ``run()`` composes the three calls and keeps the
+original single-shot closed-loop semantics — it is a convenience
+entrypoint, not the only serving path.  Fault-tolerance hooks:
+``drain()`` pulls every unfinished request off a dead replica for
+re-routing; ``preload_adapter()`` / ``evict_adapter()`` let a rebalancer
+migrate adapter residency between replicas, charging the migration's
+load cost to this replica's clock.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from .adapter_cache import AdapterSlotCache
 from .executor import StepTiming
@@ -79,6 +85,10 @@ class ServingEngine:
         self.scheduler = Scheduler(self.kv, self.adapters, cfg.max_running,
                                    policy=cfg.sched_policy)
         self.trace: List[StepTrace] = []
+        # streaming hook: called as ``on_token(req, t)`` for every token
+        # the step loop generates (the async gateway fans these out to
+        # per-request SSE streams).  None = no overhead on the hot loop.
+        self.on_token: Optional[Callable[[Request, float], None]] = None
         self.reset_stream()
 
     # ------------------------------------------------------------------ #
@@ -165,6 +175,7 @@ class ServingEngine:
                     self.kv.used_fraction, timing.total))
             # plan.running is already a snapshot; finish() mutates only the
             # scheduler's own list, so no per-step defensive copy is needed
+            on_token = self.on_token
             for req in plan.running:
                 req.generated += 1
                 req.token_times.append(t)
@@ -173,7 +184,18 @@ class ServingEngine:
                 if req.done:
                     req.finished_at = t
                     self.scheduler.finish(req)
+                if on_token is not None:
+                    on_token(req, t)
             self.clock = t
+
+    @property
+    def queue_depth(self) -> int:
+        """Admitted-but-unfinished requests on this engine: the scheduler's
+        waiting + running sets plus submitted arrivals the clock has not
+        reached yet.  The gateway's admission controller multiplies this
+        by a predicted per-request service time to estimate backlog."""
+        return (self.scheduler.n_waiting + self.scheduler.n_running
+                + len(self._pending) - self._next)
 
     def finalize(self) -> ServingMetrics:
         duration = max(self.clock, 1e-9)

@@ -1,0 +1,590 @@
+"""Async open-loop serving gateway over the resumable ``ServingEngine``.
+
+Everything below ``repro.serving`` runs on a *virtual* clock advanced by
+executor-reported step times; until this module the only ways to drive
+it were closed-loop: ``ServingEngine.run`` (every request exists up
+front) and the cluster's epoch windows (``ServingCluster.run_online``).
+``AsyncGateway`` is the open-loop front-end: requests are ``submit()``ed
+as they arrive, the engine advances via ``run_until`` between arrivals,
+and per-token streaming callbacks fire off the step loop (the engine's
+``on_token`` hook) into per-request SSE-shaped chunk streams.
+
+Layers, mirroring Ray Serve's ``LLMRouter``/``LLMServer`` split:
+
+* ``AsyncGateway``      — lifecycle + admission control over one engine
+                          replica (the ``LLMServer`` side);
+* ``GatewayHTTPServer`` — optional OpenAI-style ``/v1/completions``
+                          binding on stdlib ``asyncio.start_server``
+                          (the router/ingress side; no new deps);
+* arrival drivers       — ``repro.core.workload.open_loop_arrivals``
+                          (lazy per-adapter Poisson) and
+                          ``replay_trace`` (recorded-trace replay).
+
+**Admission control / backpressure** (S-LoRA-style early rejection): a
+request is refused with a 429-equivalent ``Rejected`` result when
+``queue_depth x predicted_service_time`` exceeds the SLO budget, where
+the service time comes from the fitted Eq. (1) estimators
+(``estimator_admission``).  Rejections are counted per adapter in
+``GatewayMetrics``.
+
+**Determinism guard**: in driven mode with admission control off, the
+gateway executes exactly the step sequence of a closed-loop
+``ServingEngine.run`` on the same request list — end-state
+``ServingMetrics`` (finished counts, token counters, pooled TTFT
+samples) are identical (``tests/test_gateway.py`` pins this).  With
+admission control on, rejected requests never reach the engine, which
+is the documented divergence.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import json
+from typing import Callable, Dict, Iterable, List, Optional, Union
+
+from .engine import ServingEngine
+from .metrics import ServingMetrics
+from .request import Request
+
+_END = object()          # stream sentinel
+
+
+# --------------------------------------------------------------------------- #
+# results: completions, streams, rejections
+# --------------------------------------------------------------------------- #
+
+def completion_chunk(req: Request, t: float) -> dict:
+    """One OpenAI-style streaming chunk for one generated token.
+
+    The simulation has no detokenizer, so ``text`` is a placeholder
+    token; ``created`` is the *virtual* clock (deterministic), not wall
+    time."""
+    return {
+        "id": f"cmpl-{req.uid}",
+        "object": "text_completion.chunk",
+        "created": round(t, 6),
+        "model": f"adapter-{req.adapter}",
+        "choices": [{
+            "index": 0,
+            "text": "tok",
+            "token_index": req.generated - 1,
+            "finish_reason": "stop" if req.done else None,
+        }],
+    }
+
+
+@dataclasses.dataclass
+class Completion:
+    """A finished non-streaming completion."""
+    request: Request
+
+    def to_json(self) -> dict:
+        req = self.request
+        return {
+            "id": f"cmpl-{req.uid}",
+            "object": "text_completion",
+            "created": round(req.finished_at or 0.0, 6),
+            "model": f"adapter-{req.adapter}",
+            "choices": [{
+                "index": 0,
+                "text": " ".join(["tok"] * req.generated),
+                "finish_reason": "stop" if req.done else "length",
+            }],
+            "usage": {
+                "prompt_tokens": req.prompt_len,
+                "completion_tokens": req.generated,
+                "total_tokens": req.prompt_len + req.generated,
+            },
+        }
+
+
+@dataclasses.dataclass
+class Rejected:
+    """429-equivalent admission refusal (503 while draining)."""
+    request: Request
+    reason: str
+    status: int = 429
+
+    def to_json(self) -> dict:
+        return {"error": {
+            "message": self.reason,
+            "type": ("unavailable" if self.status == 503
+                     else "overloaded"),
+            "code": self.status,
+        }}
+
+
+class CompletionStream:
+    """Async iterator of SSE-shaped chunks for one streamed request.
+
+    Chunks are pushed synchronously off the engine step loop (the
+    ``on_token`` hook) and consumed with ``async for``; iteration ends
+    after the request's final token (or at gateway shutdown, for a
+    request cut off by a horizon)."""
+
+    def __init__(self, request: Request):
+        self.request = request
+        self._q: asyncio.Queue = asyncio.Queue()
+        self.n_chunks = 0
+
+    def _push(self, item) -> None:
+        self._q.put_nowait(item)
+
+    def __aiter__(self) -> "CompletionStream":
+        return self
+
+    async def __anext__(self) -> dict:
+        item = await self._q.get()
+        if item is _END:
+            raise StopAsyncIteration
+        self.n_chunks += 1
+        return item
+
+
+# --------------------------------------------------------------------------- #
+# admission control
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class AdmissionControl:
+    """Backpressure gate: refuse a request when the engine's predicted
+    backlog — ``queue_depth x service_time(request)`` seconds — exceeds
+    ``slo_budget``.  ``service_time`` predicts the marginal seconds one
+    queued request adds (see ``estimator_admission`` for the fitted
+    Eq. (1) version)."""
+    slo_budget: float
+    service_time: Callable[[Request], float]
+
+    def decide(self, engine: ServingEngine, req: Request) -> Optional[str]:
+        """None = admit; otherwise the rejection reason."""
+        predicted = engine.queue_depth * float(self.service_time(req))
+        if predicted > self.slo_budget:
+            return (f"predicted backlog {predicted:.2f}s exceeds SLO "
+                    f"budget {self.slo_budget:.2f}s "
+                    f"(queue_depth={engine.queue_depth})")
+        return None
+
+
+def estimator_admission(est, length_stats: Dict[str, float],
+                        slo_budget: float) -> AdmissionControl:
+    """Admission control with the per-request service time predicted by
+    the fitted Eq. (1) estimators: one batch-of-one prefill step at the
+    mean prompt length plus one decode step per mean output token — a
+    conservative (serial) upper bound on the marginal backlog cost of
+    one queued request."""
+    out_mean = max(float(length_stats.get("out_mean", 1.0)), 1.0)
+    in_mean = int(length_stats.get("in_mean", 1.0))
+    per_request = (est.lat_model(1, in_mean)
+                   + (out_mean - 1.0) * est.lat_model(1, 0)) \
+        * est.lat_adapters(1)
+    return AdmissionControl(slo_budget=slo_budget,
+                            service_time=lambda req: per_request)
+
+
+# --------------------------------------------------------------------------- #
+# gateway metrics / report
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class GatewayMetrics:
+    """Front-end counters (the engine's ``ServingMetrics`` cover the
+    admitted stream; these cover what happened at the door)."""
+    n_submitted: int = 0
+    n_admitted: int = 0
+    n_rejected: int = 0                  # admission-control refusals
+    n_rejected_draining: int = 0         # refused because shutting down
+    rejected_per_adapter: Dict[int, int] = dataclasses.field(
+        default_factory=dict)
+    n_streamed_tokens: int = 0           # on_token callback firings
+    n_streams: int = 0                   # streaming requests opened
+
+    def reject(self, adapter: int, draining: bool = False) -> None:
+        self.n_rejected += 1
+        if draining:
+            self.n_rejected_draining += 1
+        self.rejected_per_adapter[adapter] = \
+            self.rejected_per_adapter.get(adapter, 0) + 1
+
+
+@dataclasses.dataclass
+class GatewayReport:
+    """Outcome of one gateway lifetime: the engine's end-state metrics
+    plus the front-end counters."""
+    serving: ServingMetrics
+    gateway: GatewayMetrics
+    duration: float
+
+    def summary(self) -> dict:
+        s, g = self.serving, self.gateway
+        return {
+            "duration_s": round(self.duration, 3),
+            "throughput_tok_s": round(s.throughput, 1),
+            "ttft_p50_ms": round(s.ttft_p50 * 1e3, 1),
+            "ttft_p99_ms": round(s.ttft_p99 * 1e3, 1),
+            "n_finished": s.n_finished,
+            "n_starved": s.n_starved_requests,
+            "n_admitted": g.n_admitted,
+            "n_rejected": g.n_rejected,
+            "rejected_per_adapter": dict(g.rejected_per_adapter),
+            "n_streamed_tokens": g.n_streamed_tokens,
+        }
+
+
+# --------------------------------------------------------------------------- #
+# the gateway
+# --------------------------------------------------------------------------- #
+
+class AsyncGateway:
+    """Asyncio open-loop front-end over one resumable ``ServingEngine``.
+
+    Two driving modes (one gateway instance serves one lifetime; build a
+    fresh gateway + engine per run):
+
+    * **driven** — ``await gateway.run(arrivals)``: iterate an arrival
+      process (any iterable of ``Request`` in arrival order, e.g.
+      ``open_loop_arrivals`` or ``replay_trace``), advancing the engine
+      to each arrival with ``run_until(arrival, strict=True)`` before
+      offering it, then drain.  Deterministic: with admission off this
+      reproduces ``ServingEngine.run`` bit-for-bit.
+    * **live** — ``await gateway.start()`` arms a pump task that ticks
+      the engine's virtual clock against wall time (``time_scale``
+      virtual seconds per wall second); ``await gateway.submit(...)``
+      stamps each caller's request with the current virtual time (this
+      is what the HTTP binding calls); ``await gateway.shutdown()``
+      stops admitting, drains in-flight work, and flushes metrics.
+    """
+
+    def __init__(self, engine: ServingEngine,
+                 admission: Optional[AdmissionControl] = None,
+                 tick: float = 0.02, time_scale: float = 1.0):
+        self.engine = engine
+        self.admission = admission
+        self.tick = tick                  # live-mode pump period (wall s)
+        self.time_scale = time_scale      # live-mode virtual s per wall s
+        self.metrics = GatewayMetrics()
+        self.state = "idle"               # idle|serving|draining|stopped
+        self.trace: List[Request] = []    # every offered request, in order
+        self._streams: Dict[int, CompletionStream] = {}
+        self._done_events: Dict[int, asyncio.Event] = {}
+        self._pump_task: Optional[asyncio.Task] = None
+        self._t0: Optional[float] = None
+        self._uid = 0
+        engine.on_token = self._on_token
+
+    # ------------------------------------------------------------------ #
+    # token fan-out (called synchronously off the engine step loop)
+    # ------------------------------------------------------------------ #
+    def _on_token(self, req: Request, t: float) -> None:
+        self.metrics.n_streamed_tokens += 1
+        stream = self._streams.get(req.uid)
+        if stream is not None:
+            stream._push(completion_chunk(req, t))
+            if req.done:
+                stream._push(_END)
+                del self._streams[req.uid]
+        if req.done:
+            ev = self._done_events.pop(req.uid, None)
+            if ev is not None:
+                ev.set()
+
+    # ------------------------------------------------------------------ #
+    # admission (shared by both modes)
+    # ------------------------------------------------------------------ #
+    def offer(self, req: Request, stream: bool = False
+              ) -> Union[Request, CompletionStream, Rejected]:
+        """Synchronous admission decision + enqueue for one arrival.
+
+        Returns the request itself (admitted), a ``CompletionStream``
+        (admitted, ``stream=True``), or a ``Rejected`` (admission gate
+        tripped, or the gateway is draining — status 503)."""
+        self.metrics.n_submitted += 1
+        self.trace.append(req)
+        if self.state in ("draining", "stopped"):
+            self.metrics.reject(req.adapter, draining=True)
+            return Rejected(req, "gateway is draining", status=503)
+        if self.admission is not None:
+            reason = self.admission.decide(self.engine, req)
+            if reason is not None:
+                self.metrics.reject(req.adapter)
+                return Rejected(req, reason)
+        self.engine.submit([req])
+        self.metrics.n_admitted += 1
+        if stream:
+            s = CompletionStream(req)
+            self._streams[req.uid] = s
+            self.metrics.n_streams += 1
+            return s
+        return req
+
+    # ------------------------------------------------------------------ #
+    # driven mode
+    # ------------------------------------------------------------------ #
+    async def run(self, arrivals: Iterable[Request],
+                  duration: Optional[float] = None, drain: bool = True,
+                  want_stream: Optional[Callable[[Request], bool]] = None
+                  ) -> GatewayReport:
+        """Serve an open-loop arrival process end to end (driven mode).
+
+        ``arrivals`` yields requests in nondecreasing arrival order; the
+        engine is advanced to each arrival (``run_until(arrival,
+        strict=True)``) before the admission decision, so the controller
+        always sees the queue depth *at* the arrival instant.  Arrivals
+        at or past ``duration`` are dropped at the door.  With ``drain``
+        every admitted request is finished before the report; otherwise
+        the engine stops once its clock reaches ``duration`` (matching
+        closed-loop ``run(horizon=duration)`` semantics)."""
+        if self.state != "idle":
+            raise RuntimeError(f"gateway already {self.state}")
+        self.engine.reset_stream()
+        self.state = "serving"
+        for req in arrivals:
+            if duration is not None and req.arrival >= duration:
+                break
+            self.engine.run_until(req.arrival, strict=True)
+            self.offer(req, stream=bool(want_stream and want_stream(req)))
+            await asyncio.sleep(0)       # let stream consumers breathe
+        return await self.shutdown(duration=duration, drain=drain)
+
+    # ------------------------------------------------------------------ #
+    # live mode
+    # ------------------------------------------------------------------ #
+    async def start(self) -> None:
+        """Arm live mode: a background pump advances the engine's
+        virtual clock against wall time until ``shutdown``."""
+        if self.state != "idle":
+            raise RuntimeError(f"gateway already {self.state}")
+        self.engine.reset_stream()
+        self.state = "serving"
+        self._t0 = asyncio.get_running_loop().time()
+        self._pump_task = asyncio.create_task(self._pump())
+
+    async def _pump(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            await asyncio.sleep(self.tick)
+            target = (loop.time() - self._t0) * self.time_scale
+            self.engine.run_until(target, strict=True)
+
+    def _virtual_now(self) -> float:
+        if self._t0 is None:
+            return self.engine.clock
+        elapsed = asyncio.get_running_loop().time() - self._t0
+        return max(self.engine.clock, elapsed * self.time_scale)
+
+    async def submit(self, adapter: int, prompt_len: int, output_len: int,
+                     stream: bool = False,
+                     arrival: Optional[float] = None
+                     ) -> Union[Completion, CompletionStream, Rejected]:
+        """Live-mode entry point (what the HTTP handlers call): stamp
+        the request with the current virtual time, admit or reject, and
+        either return the chunk stream immediately or await the
+        completed request."""
+        req = Request(uid=self._next_uid(), adapter=adapter,
+                      arrival=self._virtual_now() if arrival is None
+                      else arrival,
+                      prompt_len=max(int(prompt_len), 1),
+                      output_len=max(int(output_len), 1))
+        res = self.offer(req, stream=stream)
+        if isinstance(res, (Rejected, CompletionStream)):
+            return res
+        ev = asyncio.Event()
+        self._done_events[req.uid] = ev
+        await ev.wait()
+        return Completion(req)
+
+    def _next_uid(self) -> int:
+        self._uid += 1
+        return self._uid - 1
+
+    # ------------------------------------------------------------------ #
+    # shutdown / drain
+    # ------------------------------------------------------------------ #
+    async def shutdown(self, duration: Optional[float] = None,
+                       drain: bool = True) -> GatewayReport:
+        """Graceful drain: stop admitting (new offers get a 503
+        ``Rejected``), finish in-flight work, flush metrics."""
+        self.state = "draining"
+        if self._pump_task is not None:
+            self._pump_task.cancel()
+            try:
+                await self._pump_task
+            except asyncio.CancelledError:
+                pass
+            self._pump_task = None
+        if drain:
+            self.engine.run_until(None)
+        elif duration is not None:
+            self.engine.run_until(duration)
+        serving = self.engine.finalize()
+        # close any stream cut off by a no-drain horizon
+        for s in self._streams.values():
+            s._push(_END)
+        self._streams.clear()
+        for ev in self._done_events.values():
+            ev.set()
+        self._done_events.clear()
+        self.state = "stopped"
+        return GatewayReport(serving=serving, gateway=self.metrics,
+                             duration=self.engine.clock)
+
+    # ------------------------------------------------------------------ #
+    def snapshot(self) -> dict:
+        """Live counters (the ``/v1/metrics`` endpoint)."""
+        return {
+            "state": self.state,
+            "clock_s": round(self.engine.clock, 3),
+            "queue_depth": self.engine.queue_depth,
+            "n_submitted": self.metrics.n_submitted,
+            "n_admitted": self.metrics.n_admitted,
+            "n_rejected": self.metrics.n_rejected,
+            "rejected_per_adapter": dict(
+                self.metrics.rejected_per_adapter),
+            "n_streamed_tokens": self.metrics.n_streamed_tokens,
+        }
+
+
+# --------------------------------------------------------------------------- #
+# stdlib HTTP binding (optional; no new runtime deps)
+# --------------------------------------------------------------------------- #
+
+def sse_format(data) -> bytes:
+    """One Server-Sent-Events frame (``data: <json>\\n\\n``)."""
+    payload = data if isinstance(data, str) else json.dumps(data)
+    return b"data: " + payload.encode() + b"\n\n"
+
+
+class GatewayHTTPServer:
+    """Minimal OpenAI-style HTTP/1.1 binding over ``asyncio.start_server``.
+
+    Routes:
+
+    * ``POST /v1/completions`` — body keys: ``adapter`` (int) or
+      ``model`` (``"adapter-<uid>"``), ``prompt`` (string; whitespace
+      tokens) or ``prompt_tokens`` (int), ``max_tokens``, ``stream``.
+      Responds 200 JSON, 200 ``text/event-stream`` of chunks terminated
+      by ``data: [DONE]``, 429 when admission control rejects, or 503
+      while draining.
+    * ``GET /v1/metrics`` (or ``/metrics``) — gateway counters snapshot.
+    * ``GET /v1/health`` — lifecycle state.
+
+    Deliberately *not* a production HTTP server — it exists so the
+    gateway can be driven by real sockets without adding a web-framework
+    dependency."""
+
+    def __init__(self, gateway: AsyncGateway, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.gateway = gateway
+        self.host = host
+        self.port = port
+        self._server: Optional[asyncio.AbstractServer] = None
+
+    async def start(self) -> "GatewayHTTPServer":
+        self._server = await asyncio.start_server(
+            self._handle, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        return self
+
+    async def stop(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+
+    # ------------------------------------------------------------------ #
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        try:
+            parsed = await self._read_request(reader)
+            if parsed is None:
+                return
+            method, path, payload = parsed
+            if method == "POST" and path == "/v1/completions":
+                await self._completions(writer, payload)
+            elif method == "GET" and path in ("/v1/metrics", "/metrics"):
+                await self._respond(writer, 200, self.gateway.snapshot())
+            elif method == "GET" and path == "/v1/health":
+                await self._respond(writer, 200,
+                                    {"status": self.gateway.state})
+            else:
+                await self._respond(writer, 404, {"error": {
+                    "message": f"no route for {method} {path}",
+                    "code": 404}})
+        except (ConnectionResetError, BrokenPipeError):
+            pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionResetError, BrokenPipeError):
+                pass
+
+    async def _read_request(self, reader: asyncio.StreamReader):
+        line = await reader.readline()
+        if not line:
+            return None
+        parts = line.decode("latin-1").split()
+        if len(parts) < 2:
+            return None
+        method, path = parts[0].upper(), parts[1]
+        headers: Dict[str, str] = {}
+        while True:
+            h = await reader.readline()
+            if h in (b"\r\n", b"\n", b""):
+                break
+            key, _, val = h.decode("latin-1").partition(":")
+            headers[key.strip().lower()] = val.strip()
+        length = int(headers.get("content-length", 0) or 0)
+        body = await reader.readexactly(length) if length else b""
+        try:
+            payload = json.loads(body) if body else {}
+        except json.JSONDecodeError:
+            payload = None
+        return method, path, payload
+
+    async def _completions(self, writer, payload) -> None:
+        if not isinstance(payload, dict):
+            await self._respond(writer, 400, {"error": {
+                "message": "body must be a JSON object", "code": 400}})
+            return
+        adapter = payload.get("adapter")
+        if adapter is None:
+            tail = str(payload.get("model", "adapter-0")).rsplit("-", 1)[-1]
+            adapter = int(tail) if tail.isdigit() else 0
+        prompt_len = int(payload.get("prompt_tokens", 0) or 0)
+        if prompt_len <= 0:
+            prompt_len = max(len(str(payload.get("prompt", "")).split()), 1)
+        max_tokens = max(int(payload.get("max_tokens", 16)), 1)
+        stream = bool(payload.get("stream", False))
+        res = await self.gateway.submit(
+            adapter=int(adapter), prompt_len=prompt_len,
+            output_len=max_tokens, stream=stream)
+        if isinstance(res, Rejected):
+            await self._respond(writer, res.status, res.to_json())
+        elif isinstance(res, CompletionStream):
+            writer.write(self._head(200, "text/event-stream"))
+            await writer.drain()
+            async for chunk in res:
+                writer.write(sse_format(chunk))
+                await writer.drain()
+            writer.write(sse_format("[DONE]"))
+            await writer.drain()
+        else:
+            await self._respond(writer, 200, res.to_json())
+
+    # ------------------------------------------------------------------ #
+    _STATUS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+               429: "Too Many Requests", 503: "Service Unavailable"}
+
+    def _head(self, status: int, ctype: str,
+              length: Optional[int] = None) -> bytes:
+        lines = [f"HTTP/1.1 {status} {self._STATUS.get(status, 'OK')}",
+                 f"Content-Type: {ctype}", "Connection: close"]
+        if length is not None:
+            lines.append(f"Content-Length: {length}")
+        return ("\r\n".join(lines) + "\r\n\r\n").encode()
+
+    async def _respond(self, writer, status: int, obj: dict) -> None:
+        body = json.dumps(obj).encode()
+        writer.write(self._head(status, "application/json", len(body)))
+        writer.write(body)
+        await writer.drain()

@@ -1,0 +1,317 @@
+"""Async gateway: determinism vs the closed loop, admission control,
+drain semantics, streaming, and the stdlib HTTP binding.
+
+No pytest-asyncio dependency: every async scenario runs under a plain
+``asyncio.run`` inside a sync test.
+"""
+import asyncio
+import json
+
+from repro.core.workload import (WorkloadSpec, generate_requests, load_trace,
+                                 make_adapter_pool, open_loop_arrivals,
+                                 replay_trace, save_trace)
+from repro.serving import (AdmissionControl, AsyncGateway, EngineConfig,
+                           GatewayHTTPServer, HardwareProfile, Rejected,
+                           Request, ServingEngine, SyntheticExecutor)
+
+
+def make_engine(n_adapters=8, slots=4, kv=20_000, max_running=16, seed=0):
+    profile = HardwareProfile()
+    ranks = {i: 8 for i in range(n_adapters)}
+    ex = SyntheticExecutor(profile, ranks, slots=slots,
+                          n_adapters=n_adapters, seed=seed)
+    return ServingEngine(EngineConfig(
+        kv_capacity_tokens=kv, adapter_slots=slots,
+        max_running=max_running), ex)
+
+
+def make_trace(n_adapters=8, rate=0.8, horizon=20.0, seed=3):
+    pool = make_adapter_pool(n_adapters, [8], [rate])
+    spec = WorkloadSpec(adapters=pool, dataset="medium", horizon=horizon,
+                        seed=seed)
+    return generate_requests(spec)
+
+
+# --------------------------------------------------------------------------- #
+# determinism: driven gateway == closed-loop engine
+# --------------------------------------------------------------------------- #
+
+def test_gateway_matches_closed_loop_run():
+    trace = make_trace()
+    closed = make_engine(seed=1).run(list(replay_trace(trace)))
+
+    gw = AsyncGateway(make_engine(seed=1))
+    rep = asyncio.run(gw.run(replay_trace(trace)))
+
+    assert rep.serving.n_finished == closed.n_finished
+    assert rep.serving.n_starved_requests == closed.n_starved_requests
+    assert sorted(rep.serving.ttft_samples) == sorted(closed.ttft_samples)
+    assert rep.serving.throughput == closed.throughput
+    assert rep.serving.duration == closed.duration
+    assert rep.gateway.n_admitted == len(trace)
+    assert rep.gateway.n_rejected == 0
+
+
+def test_gateway_matches_closed_loop_at_horizon():
+    """No-drain horizon cut matches run(horizon=...) semantics too."""
+    trace = make_trace(rate=2.0, horizon=10.0)
+    closed = make_engine(seed=2).run(list(replay_trace(trace)),
+                                     horizon=10.0)
+    gw = AsyncGateway(make_engine(seed=2))
+    rep = asyncio.run(gw.run(replay_trace(trace), duration=10.0,
+                             drain=False))
+    assert rep.serving.n_finished == closed.n_finished
+    assert rep.serving.n_starved_requests == closed.n_starved_requests
+    assert sorted(rep.serving.ttft_samples) == sorted(closed.ttft_samples)
+
+
+def test_trace_roundtrip(tmp_path):
+    trace = make_trace(horizon=8.0)
+    path = tmp_path / "trace.json"
+    save_trace(path, trace)
+    loaded = load_trace(path)
+    assert [(r.uid, r.adapter, r.arrival, r.prompt_len, r.output_len)
+            for r in loaded] == \
+        [(r.uid, r.adapter, r.arrival, r.prompt_len, r.output_len)
+         for r in trace]
+
+    a = make_engine(seed=4).run(list(replay_trace(trace)))
+    b = make_engine(seed=4).run(list(replay_trace(loaded)))
+    assert a.n_finished == b.n_finished
+    assert sorted(a.ttft_samples) == sorted(b.ttft_samples)
+
+
+def test_open_loop_arrivals_deterministic_and_ordered():
+    pool = make_adapter_pool(6, [8], [0.7])
+    a = list(open_loop_arrivals(pool, horizon=15.0, seed=9))
+    b = list(open_loop_arrivals(pool, horizon=15.0, seed=9))
+    assert [(r.adapter, r.arrival) for r in a] == \
+        [(r.adapter, r.arrival) for r in b]
+    assert all(x.arrival <= y.arrival for x, y in zip(a, a[1:]))
+    assert all(r.arrival < 15.0 for r in a)
+    assert {r.adapter for r in a} == set(range(6))
+    assert [r.uid for r in a] == list(range(len(a)))
+
+
+# --------------------------------------------------------------------------- #
+# edge cases: idle, burst/admission, drain, streaming counters
+# --------------------------------------------------------------------------- #
+
+def test_zero_arrival_idle():
+    gw = AsyncGateway(make_engine())
+    rep = asyncio.run(gw.run(iter([])))
+    assert rep.serving.n_finished == 0
+    assert rep.gateway.n_submitted == 0
+    assert rep.duration == 0.0
+    assert gw.state == "stopped"
+
+
+def test_zero_arrival_idle_tick_live():
+    """Live mode with no traffic: the pump ticks without advancing an
+    idle engine and shuts down cleanly."""
+    async def scenario():
+        gw = AsyncGateway(make_engine(), tick=0.005, time_scale=100.0)
+        await gw.start()
+        await asyncio.sleep(0.05)        # several pump ticks
+        return await gw.shutdown()
+
+    rep = asyncio.run(scenario())
+    assert rep.serving.n_finished == 0
+    assert rep.duration == 0.0           # idle engine never moved
+
+
+def test_burst_rejects_then_recovers():
+    """A burst past the admission budget sheds; once the backlog drains
+    a later request is admitted again."""
+    adm = AdmissionControl(slo_budget=5.0, service_time=lambda r: 1.0)
+    gw = AsyncGateway(make_engine(), admission=adm)
+    burst = [Request(uid=i, adapter=i % 4, arrival=0.0, prompt_len=64,
+                     output_len=32) for i in range(20)]
+    late = Request(uid=99, adapter=0, arrival=500.0, prompt_len=64,
+                   output_len=32)
+    rep = asyncio.run(gw.run(iter(burst + [late])))
+
+    assert rep.gateway.n_rejected > 0
+    assert rep.gateway.n_admitted + rep.gateway.n_rejected == 21
+    # queue_depth grows 0,1,2,... during the burst: exactly budget/1.0
+    # + 1 requests fit before the predicted backlog trips the gate
+    assert rep.gateway.n_admitted == 6 + 1
+    assert sum(rep.gateway.rejected_per_adapter.values()) == \
+        rep.gateway.n_rejected
+    # the late arrival found an empty queue again -> admitted + finished
+    assert late.finished_at is not None
+    assert rep.serving.n_finished == rep.gateway.n_admitted
+
+
+def test_rejected_requests_never_reach_engine():
+    adm = AdmissionControl(slo_budget=0.5, service_time=lambda r: 1.0)
+    engine = make_engine()
+    gw = AsyncGateway(engine, admission=adm)
+    reqs = [Request(uid=i, adapter=0, arrival=0.0, prompt_len=16,
+                    output_len=8) for i in range(5)]
+    rep = asyncio.run(gw.run(iter(reqs)))
+    # depth 0 admits the first; every later one sees depth >= 1 -> shed
+    assert rep.gateway.n_admitted == 1
+    assert rep.gateway.n_rejected == 4
+    assert rep.gateway.rejected_per_adapter == {0: 4}
+    assert len(engine._accepted) == 1
+
+
+def test_drain_completes_all_admitted():
+    trace = make_trace(rate=1.5, horizon=6.0)
+    gw = AsyncGateway(make_engine())
+    rep = asyncio.run(gw.run(replay_trace(trace)))
+    admitted = gw.trace
+    assert len(admitted) == len(trace)
+    assert all(r.finished_at is not None for r in admitted)
+    assert rep.serving.n_finished == rep.gateway.n_admitted
+    assert rep.serving.n_starved_requests == 0
+
+
+def test_offers_rejected_while_draining():
+    gw = AsyncGateway(make_engine())
+    rep = asyncio.run(gw.run(iter([])))
+    assert rep is not None
+    res = gw.offer(Request(uid=0, adapter=0, arrival=0.0, prompt_len=8,
+                           output_len=4))
+    assert isinstance(res, Rejected)
+    assert res.status == 503
+    assert gw.metrics.n_rejected_draining == 1
+
+
+def test_streaming_counts_match_serving_metrics():
+    """Every generated token fires the callback exactly once: the
+    gateway's streamed-token counter equals the engine's output-token
+    counter and the metrics' throughput integral."""
+    trace = make_trace(rate=1.0, horizon=8.0)
+    engine = make_engine()
+    gw = AsyncGateway(engine)
+    rep = asyncio.run(gw.run(replay_trace(trace),
+                             want_stream=lambda r: True))
+    assert rep.gateway.n_streams == len(trace)
+    assert rep.gateway.n_streamed_tokens == engine.n_tokens_out
+    assert rep.gateway.n_streamed_tokens == \
+        sum(r.generated for r in gw.trace)
+    assert abs(rep.serving.throughput * rep.serving.duration
+               - rep.gateway.n_streamed_tokens) < 1e-6
+
+
+def test_live_stream_chunks():
+    """Live mode: a streamed submit yields one chunk per token, the last
+    one carrying finish_reason=stop."""
+    async def scenario():
+        gw = AsyncGateway(make_engine(), tick=0.001, time_scale=500.0)
+        await gw.start()
+        stream = await gw.submit(adapter=2, prompt_len=16, output_len=5,
+                                 stream=True)
+        chunks = [c async for c in stream]
+        rep = await gw.shutdown()
+        return chunks, rep
+
+    chunks, rep = asyncio.run(scenario())
+    assert len(chunks) == 5
+    assert [c["choices"][0]["finish_reason"] for c in chunks] == \
+        [None] * 4 + ["stop"]
+    assert chunks[0]["model"] == "adapter-2"
+    assert rep.gateway.n_streamed_tokens == 5
+
+
+# --------------------------------------------------------------------------- #
+# HTTP binding
+# --------------------------------------------------------------------------- #
+
+async def _post(port, payload, timeout=30.0):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    body = json.dumps(payload).encode()
+    writer.write(b"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+                 b"Content-Type: application/json\r\n"
+                 + f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+    await writer.drain()
+    data = await asyncio.wait_for(reader.read(), timeout)
+    writer.close()
+    return data.decode()
+
+
+async def _get(port, path, timeout=30.0):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    writer.write(f"GET {path} HTTP/1.1\r\nHost: t\r\n\r\n".encode())
+    await writer.drain()
+    data = await asyncio.wait_for(reader.read(), timeout)
+    writer.close()
+    return data.decode()
+
+
+def _body(resp: str) -> dict:
+    return json.loads(resp.split("\r\n\r\n", 1)[1])
+
+
+def test_http_completions_and_metrics():
+    async def scenario():
+        gw = AsyncGateway(make_engine(), tick=0.001, time_scale=500.0)
+        await gw.start()
+        server = await GatewayHTTPServer(gw, port=0).start()
+        out = {}
+        out["plain"] = await _post(server.port, {
+            "model": "adapter-3", "prompt": "three word prompt",
+            "max_tokens": 4})
+        out["sse"] = await _post(server.port, {
+            "adapter": 1, "prompt_tokens": 8, "max_tokens": 3,
+            "stream": True})
+        out["metrics"] = await _get(server.port, "/v1/metrics")
+        out["health"] = await _get(server.port, "/v1/health")
+        out["missing"] = await _get(server.port, "/nope")
+        await server.stop()
+        await gw.shutdown()
+        return out
+
+    out = asyncio.run(scenario())
+    assert out["plain"].startswith("HTTP/1.1 200")
+    plain = _body(out["plain"])
+    assert plain["model"] == "adapter-3"
+    assert plain["usage"]["completion_tokens"] == 4
+    assert plain["choices"][0]["finish_reason"] == "stop"
+
+    assert out["sse"].startswith("HTTP/1.1 200")
+    assert "text/event-stream" in out["sse"]
+    chunks = [json.loads(line[len("data: "):])
+              for line in out["sse"].splitlines()
+              if line.startswith("data: {")]
+    assert len(chunks) == 3
+    assert chunks[-1]["choices"][0]["finish_reason"] == "stop"
+    assert "data: [DONE]" in out["sse"]
+
+    metrics = _body(out["metrics"])
+    assert metrics["n_admitted"] == 2
+    assert metrics["n_rejected"] == 0
+    assert _body(out["health"]) == {"status": "serving"}
+    assert out["missing"].startswith("HTTP/1.1 404")
+
+
+def test_http_backpressure_429():
+    """With a zero budget, any nonempty queue sheds: the first (slow,
+    streamed) request occupies the engine, the second gets a 429."""
+    async def scenario():
+        adm = AdmissionControl(slo_budget=0.0,
+                               service_time=lambda r: 1000.0)
+        # time_scale tiny: virtually nothing finishes during the test
+        gw = AsyncGateway(make_engine(), admission=adm, tick=0.01,
+                          time_scale=0.001)
+        await gw.start()
+        server = await GatewayHTTPServer(gw, port=0).start()
+        first = asyncio.create_task(_post(server.port, {
+            "adapter": 0, "prompt_tokens": 8, "max_tokens": 200,
+            "stream": True}))
+        while gw.metrics.n_admitted == 0:      # first request in queue
+            await asyncio.sleep(0.005)
+        second = await _post(server.port, {
+            "adapter": 1, "prompt_tokens": 8, "max_tokens": 4})
+        await server.stop()
+        await gw.shutdown()                     # drains -> first finishes
+        return await first, second
+
+    first, second = asyncio.run(scenario())
+    assert second.startswith("HTTP/1.1 429")
+    err = _body(second)["error"]
+    assert err["code"] == 429 and err["type"] == "overloaded"
+    assert first.startswith("HTTP/1.1 200")
+    assert "data: [DONE]" in first

@@ -3,7 +3,7 @@
     PYTHONPATH=src python tools/check_docs.py              # everything
     PYTHONPATH=src python tools/check_docs.py --links-only # fast (tier-1)
 
-Three checks over README.md + docs/*.md:
+Four checks over README.md + docs/*.md:
 
 1. **links** — every relative markdown link/image target exists
    (anchors stripped; http(s)/mailto links are skipped);
@@ -11,7 +11,12 @@ Three checks over README.md + docs/*.md:
    is mentioned in docs/benchmarks.md, and every ``benchmarks/*.py``
    path mentioned anywhere in the docs exists (the figure → script map
    cannot rot in either direction);
-3. **examples** — every fenced ```python block executes in a fresh
+3. **cli flags** — every ``--flag`` token in a markdown table row is
+   cross-checked against the launcher's real argparse parser.  The
+   launcher context is the most recent ``repro.launch.<name>`` mention
+   in the file; launchers expose ``build_parser()`` for this.  A
+   documented flag the parser does not define fails the check;
+4. **examples** — every fenced ```python block executes in a fresh
    interpreter with PYTHONPATH=src and smoke sizes
    (REPRO_BENCH_SMOKE=1).  A block preceded by an HTML comment line
    ``<!-- docs: no-run -->`` is skipped.
@@ -77,6 +82,64 @@ def check_benchmark_table() -> List[str]:
     return errors
 
 
+LAUNCH_RE = re.compile(r"repro\.launch\.(\w+)")
+FLAG_RE = re.compile(r"--[\w][\w-]*")
+
+
+def _parser_flags(launcher: str):
+    """Option strings of repro.launch.<launcher>'s argparse parser, or
+    None when the module does not expose build_parser()."""
+    import importlib
+    mod = importlib.import_module(f"repro.launch.{launcher}")
+    build = getattr(mod, "build_parser", None)
+    if build is None:
+        return None
+    return {s for action in build()._actions
+            for s in action.option_strings}
+
+
+def check_cli_flags() -> List[str]:
+    errors: List[str] = []
+    sys.path.insert(0, str(ROOT / "src"))
+    cache: dict = {}
+    for md in DOC_FILES:
+        context = None
+        in_fence = False
+        for n, line in enumerate(md.read_text().splitlines(), 1):
+            if line.strip().startswith("```"):
+                in_fence = not in_fence
+            m = LAUNCH_RE.search(line)
+            if m:
+                # fenced shell examples legitimately set the context too
+                context = m.group(1)
+            if in_fence or not line.lstrip().startswith("|"):
+                continue
+            flags = FLAG_RE.findall(line)
+            if not flags or context is None:
+                continue
+            where = f"{md.relative_to(ROOT)}:{n}"
+            if context not in cache:
+                try:
+                    cache[context] = _parser_flags(context)
+                except Exception as e:   # pragma: no cover - import rot
+                    cache[context] = e
+            known = cache[context]
+            if isinstance(known, Exception):
+                errors.append(f"{where}: cannot import repro.launch."
+                              f"{context} to verify flags: {known}")
+                continue
+            if known is None:
+                errors.append(f"{where}: repro.launch.{context} exposes "
+                              f"no build_parser() to verify flags "
+                              f"against")
+                continue
+            for flag in flags:
+                if flag not in known:
+                    errors.append(f"{where}: documents {flag}, not a "
+                                  f"repro.launch.{context} flag")
+    return errors
+
+
 def extract_python_blocks(md: Path) -> List[Tuple[int, str]]:
     blocks, buf, lang, start = [], [], None, 0
     skip_next = False
@@ -127,7 +190,8 @@ def main() -> int:
 
     failures = 0
     for title, errs in (("links", check_links()),
-                        ("benchmark table", check_benchmark_table())):
+                        ("benchmark table", check_benchmark_table()),
+                        ("cli flags", check_cli_flags())):
         if errs:
             failures += len(errs)
             print(f"FAIL [{title}]:")
