@@ -1,58 +1,268 @@
-"""Kernel-layer microbenchmarks: BGMV / SGMV / flash-decode XLA-fallback
-wall time on CPU + analytical VMEM footprints of the Pallas tilings
-(the TPU target is compile-time validated by the dry-run)."""
+"""Kernel-layer microbenchmarks + the twin's kernel measurement mode.
+
+Three jobs:
+
+1. **Microbenchmarks** — BGMV / SGMV / flash-decode / fused-decode wall
+   time on the XLA fallback path (CPU; the TPU target is compile-time
+   validated by the dry-run), with analytical VMEM footprints of the
+   Pallas tilings.  The fused-vs-unfused arms time one fused
+   ``ops.fused_decode`` launch against the base-then-adapter sequence
+   (``ops.flash_decode`` + ``ops.lora_apply`` + add) at the same shape.
+
+2. **Stable timing** — ``_time`` warms up, then takes min-of-k round
+   means and reports the coefficient of variation across rounds.
+   Rounds polluted by thermal/background noise (CV above the gate) are
+   re-measured with the slowest round dropped, so fitted step-time
+   coefficients are stable across runs; the CV is printed in the derived
+   column so instability is visible in CI logs.
+
+3. **Measurement mode** — ``collect_kernel_rows`` runs the fused decode
+   kernel over a per-(rank, batch, seq) grid (plus SGMV prefill and
+   unique-adapter arms) and ``measured_step_times`` fits the rows into a
+   ``repro.core.MeasuredStepTimes`` surface, the opt-in
+   ``measured_step_times=`` hook on the twin/placement path — closing
+   the loop from real kernel costs back to Eq. (1).
+"""
 from __future__ import annotations
 
+import dataclasses
+import statistics
 import time
 
 import jax
 import jax.numpy as jnp
 
-from .common import CsvOut
-from repro.kernels import ops, ref
+from .common import CsvOut, is_smoke
+from repro.core import MeasuredStepTimes, fit_measured_step_times
+from repro.kernels import ops
 
 
-def _time(fn, *args, reps=5):
-    # warm up exactly once and block on that output (block_until_ready
-    # handles pytrees, tuples included)
+@dataclasses.dataclass
+class Timing:
+    us: float            # min-of-k per-launch wall time (microseconds)
+    cv: float            # coefficient of variation across kept rounds
+    rejected: int        # rounds discarded by the CV gate
+
+    @property
+    def derived(self) -> str:
+        return f"cv={self.cv:.3f};rejected_rounds={self.rejected}"
+
+
+def _time(fn, *args, reps: int = 5, rounds: int = 3, cv_gate: float = 0.30,
+          max_rounds: int = 8) -> Timing:
+    """Per-launch wall time, robust to thermally-polluted samples.
+
+    Warms up exactly once and blocks on the real output
+    (``block_until_ready`` handles pytrees, tuples included).  Then takes
+    ``rounds`` rounds of ``reps`` launches each; if the coefficient of
+    variation of the round means exceeds ``cv_gate``, the slowest round
+    (the thermally-polluted one — pollution is one-sided) is dropped and
+    a fresh round is measured, up to ``max_rounds`` total.  Returns the
+    **min** of the kept round means (the least-disturbed estimate — the
+    right statistic for fitting step-time coefficients) plus the final
+    CV and the number of rejected rounds.
+    """
     jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps * 1e6
 
+    def one_round() -> float:
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(*args))
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    means = [one_round() for _ in range(rounds)]
+    rejected = 0
+    budget = max_rounds - rounds
+
+    def cv(xs) -> float:
+        m = statistics.fmean(xs)
+        return (statistics.pstdev(xs) / m) if m > 0 else 0.0
+
+    while len(means) >= 2 and cv(means) > cv_gate and budget > 0:
+        means.remove(max(means))
+        means.append(one_round())
+        rejected += 1
+        budget -= 1
+    return Timing(us=min(means), cv=cv(means), rejected=rejected)
+
+
+# --------------------------------------------------------------------- #
+# measurement mode: kernel launches -> MeasuredStepTimes rows
+# --------------------------------------------------------------------- #
+
+def _decode_data(key, bsz, s, rank, n, h=8, kv=2, d=64, dx=128,
+                 dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    q = jax.random.normal(ks[0], (bsz, h, d), dtype)
+    k = jax.random.normal(ks[1], (bsz, s, kv, d), dtype)
+    v = jax.random.normal(ks[2], (bsz, s, kv, d), dtype)
+    x = jax.random.normal(ks[3], (bsz, dx), dtype)
+    a = jax.random.normal(ks[4], (n, dx, rank), dtype)
+    b = jax.random.normal(ks[5], (n, rank, h * d), dtype)
+    idx = jax.random.randint(ks[0], (bsz,), 0, n)
+    return q, k, v, x, a, b, idx
+
+
+def collect_kernel_rows(mode: str = "ref", smoke: bool | None = None,
+                        seed: int = 0) -> list:
+    """Run the kernels over a per-(rank, batch, seq) grid; return fit rows.
+
+    ``mode`` is the ops dispatch override ('ref' on CPU is the XLA
+    fallback — same math, honest relative costs; 'pallas' on TPU times
+    the real kernels).  Rows feed ``fit_measured_step_times``.
+    """
+    if smoke is None:
+        smoke = is_smoke()
+    key = jax.random.PRNGKey(seed)
+    if smoke:
+        b_grid, s_grid, r_grid = (1, 4), (128, 256), (8, 16)
+        pf_grid, a_grid = (256, 512), (1, 2, 4)
+        reps, rounds = 2, 2
+    else:
+        b_grid, s_grid, r_grid = (1, 8, 32), (256, 1024, 4096), (8, 16, 32)
+        pf_grid, a_grid = (512, 2048, 4096), (1, 2, 8, 32)
+        reps, rounds = 5, 3
+    rows = []
+
+    # decode surface: one fused launch per (batch, seq, rank) point
+    for bsz in b_grid:
+        for s in s_grid:
+            for rank in r_grid:
+                q, k, v, x, a, b, idx = _decode_data(key, bsz, s, rank,
+                                                     n=max(a_grid))
+                f = jax.jit(lambda q, k, v, x, a, b, i, _s=s: ops.fused_decode(
+                    q, k, v, _s, x, a, b, i, force=mode))
+                t = _time(f, q, k, v, x, a, b, idx, reps=reps,
+                          rounds=rounds)
+                rows.append(dict(kind="decode", batch=bsz, seq=s,
+                                 rank=rank, t=t.us * 1e-6, cv=t.cv))
+
+    # prefill: SGMV launch cost per token count
+    for tokens in pf_grid:
+        d, rank, o, n = 128, 16, 128, max(a_grid)
+        ks = jax.random.split(key, 4)
+        x = jax.random.normal(ks[0], (tokens, d), jnp.bfloat16)
+        a = jax.random.normal(ks[1], (n, d, rank), jnp.bfloat16)
+        b = jax.random.normal(ks[2], (n, rank, o), jnp.bfloat16)
+        it = jax.random.randint(ks[3], (tokens,), 0, n)
+        f = jax.jit(lambda x, a, b, i: ops.lora_apply(x, a, b, i,
+                                                      force=mode))
+        t = _time(f, x, a, b, it, reps=reps, rounds=rounds)
+        rows.append(dict(kind="prefill", tokens=tokens, t=t.us * 1e-6,
+                         cv=t.cv))
+
+    # unique-adapter multiplier: same shape, growing distinct adapters
+    bsz, s, rank = max(b_grid), max(s_grid), 16
+    base_t = None
+    for a_unique in a_grid:
+        q, k, v, x, a, b, _ = _decode_data(key, bsz, s, rank,
+                                           n=max(a_grid))
+        idx = jnp.arange(bsz, dtype=jnp.int32) % a_unique
+        f = jax.jit(lambda q, k, v, x, a, b, i, _s=s: ops.fused_decode(
+            q, k, v, _s, x, a, b, i, force=mode))
+        t = _time(f, q, k, v, x, a, b, idx, reps=reps, rounds=rounds)
+        if base_t is None:
+            base_t = t.us
+        rows.append(dict(kind="adapters", a_unique=a_unique,
+                         mult=t.us / base_t, cv=t.cv))
+    return rows
+
+
+def measured_step_times(mode: str = "ref", smoke: bool | None = None,
+                        seed: int = 0) -> MeasuredStepTimes:
+    """One-call measurement mode: kernel launches -> fitted surface for
+    the twin's ``measured_step_times=`` hook."""
+    rows = collect_kernel_rows(mode=mode, smoke=smoke, seed=seed)
+    seqs = [r["seq"] for r in rows if r["kind"] == "decode"]
+    ranks = [r["rank"] for r in rows if r["kind"] == "decode"]
+    return fit_measured_step_times(
+        rows, mean_seq=statistics.fmean(seqs),
+        mean_rank=statistics.fmean(ranks))
+
+
+# --------------------------------------------------------------------- #
+# the benchmark
+# --------------------------------------------------------------------- #
 
 def main(out: CsvOut) -> None:
+    smoke = is_smoke()
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 4)
+
     # BGMV decode shapes (B tokens, one adapter each)
-    for (t, d, r, o, n) in [(32, 2048, 16, 2048, 32),
-                            (128, 3072, 16, 3072, 32)]:
+    bgmv_shapes = [(8, 256, 16, 256, 8)] if smoke else \
+        [(32, 2048, 16, 2048, 32), (128, 3072, 16, 3072, 32)]
+    for (t, d, r, o, n) in bgmv_shapes:
         x = jax.random.normal(ks[0], (t, d), jnp.bfloat16)
         a = jax.random.normal(ks[1], (n, d, r), jnp.bfloat16)
         b = jax.random.normal(ks[2], (n, r, o), jnp.bfloat16)
         idx = jax.random.randint(ks[3], (t,), 0, n)
         f = jax.jit(lambda x, a, b, i: ops.lora_apply(x, a, b, i))
-        us = _time(f, x, a, b, idx)
+        tm = _time(f, x, a, b, idx)
         vmem_kb = (d * r + r * o + d + o) * 2 / 1024
-        out.row(f"bgmv_t{t}_d{d}", us, f"vmem_per_step_kb={vmem_kb:.0f}")
-    # SGMV prefill shapes
-    for (t, d, r, o, n) in [(4096, 2048, 16, 2048, 32)]:
+        out.row(f"bgmv_t{t}_d{d}", tm.us,
+                f"vmem_per_step_kb={vmem_kb:.0f};{tm.derived}")
+
+    # SGMV prefill shapes — dense and ragged-rank arms
+    sgmv_shapes = [(512, 256, 16, 256, 8)] if smoke else \
+        [(4096, 2048, 16, 2048, 32)]
+    for (t, d, r, o, n) in sgmv_shapes:
         x = jax.random.normal(ks[0], (t, d), jnp.bfloat16)
         a = jax.random.normal(ks[1], (n, d, r), jnp.bfloat16)
         b = jax.random.normal(ks[2], (n, r, o), jnp.bfloat16)
         idx = jax.random.randint(ks[3], (t,), 0, n)
-        f = jax.jit(lambda x, a, b, i: ref.lora_ref_bucketed(x, a, b, i))
-        us = _time(f, x, a, b, idx)
+        ranks = (jnp.arange(n, dtype=jnp.int32) % 3 + 1) * (r // 4)
+        f = jax.jit(lambda x, a, b, i: ops.lora_apply(x, a, b, i))
+        tm = _time(f, x, a, b, idx)
         vmem_kb = (128 * d + d * r + r * o + 128 * o) * 2 / 1024
-        out.row(f"sgmv_t{t}_d{d}", us, f"vmem_per_tile_kb={vmem_kb:.0f}")
-    # flash decode
-    for (b, h, kv, d, s) in [(8, 32, 8, 128, 4096)]:
+        out.row(f"sgmv_t{t}_d{d}", tm.us,
+                f"vmem_per_tile_kb={vmem_kb:.0f};{tm.derived}")
+        fr = jax.jit(lambda x, a, b, i, rk: ops.lora_apply(x, a, b, i,
+                                                           ranks=rk))
+        tr = _time(fr, x, a, b, idx, ranks)
+        out.row(f"sgmv_ragged_t{t}_d{d}", tr.us,
+                f"ranks<=r_max={r};{tr.derived}")
+
+    # flash decode + the fused-vs-unfused arms
+    fd_shapes = [(4, 8, 2, 64, 512, 128, 16, 8)] if smoke else \
+        [(8, 32, 8, 128, 4096, 4096, 16, 32),
+         (32, 32, 8, 128, 2048, 4096, 16, 32)]
+    for (b, h, kv, d, s, dx, r, n) in fd_shapes:
         q = jax.random.normal(ks[0], (b, h, d), jnp.bfloat16)
         k = jax.random.normal(ks[1], (b, s, kv, d), jnp.bfloat16)
         v = jax.random.normal(ks[2], (b, s, kv, d), jnp.bfloat16)
-        f = jax.jit(lambda q, k, v: ops.flash_decode(q, k, v, s))
-        us = _time(f, q, k, v)
+        x = jax.random.normal(ks[3], (b, dx), jnp.bfloat16)
+        aw = jax.random.normal(ks[1], (n, dx, r), jnp.bfloat16)
+        bw = jax.random.normal(ks[2], (n, r, h * d), jnp.bfloat16)
+        idx = jax.random.randint(ks[3], (b,), 0, n)
+
+        f_attn = jax.jit(lambda q, k, v: ops.flash_decode(q, k, v, s))
+        t_attn = _time(f_attn, q, k, v)
         vmem_kb = (512 * kv * d * 2 * 2 + h * d * 4) / 1024
-        out.row(f"flashdec_b{b}_s{s}", us,
-                f"vmem_per_block_kb={vmem_kb:.0f}")
+        out.row(f"flashdec_b{b}_s{s}", t_attn.us,
+                f"vmem_per_block_kb={vmem_kb:.0f};{t_attn.derived}")
+
+        # unfused: base attention, separate LoRA launch, add-back
+        def unfused(q, k, v, x, aw, bw, i, _s=s, _b=b, _h=h, _d=d):
+            attn = ops.flash_decode(q, k, v, _s)
+            delta = ops.lora_apply(x, aw, bw, i)
+            return attn + delta.reshape(_b, _h, _d).astype(attn.dtype)
+        t_unf = _time(jax.jit(unfused), q, k, v, x, aw, bw, idx)
+        out.row(f"decode_unfused_b{b}_s{s}", t_unf.us, t_unf.derived)
+
+        f_fused = jax.jit(lambda q, k, v, x, aw, bw, i, _s=s:
+                          ops.fused_decode(q, k, v, _s, x, aw, bw, i))
+        t_fus = _time(f_fused, q, k, v, x, aw, bw, idx)
+        out.row(f"decode_fused_b{b}_s{s}", t_fus.us,
+                f"vs_unfused={t_unf.us / max(t_fus.us, 1e-9):.2f}x;"
+                f"{t_fus.derived}")
+
+    # measurement mode: fit the MeasuredStepTimes surface from real
+    # launches and print the coefficients (the twin hook's input)
+    mst = measured_step_times(smoke=smoke)
+    c = mst.decode
+    out.row("measured_fit_decode", c[0] * 1e6,
+            f"cB_us={c[1] * 1e6:.3f};cBS_ns={c[2] * 1e9:.4f};"
+            f"cBr_us={c[3] * 1e6:.4f};"
+            f"prefill_us_per_tok={mst.prefill_per_token * 1e6:.4f};"
+            f"adapter_mult_slope={mst.adapters[1]:.4f}")

@@ -1,16 +1,79 @@
-"""Roofline table from the dry-run's JSONL records (§Roofline in
-EXPERIMENTS.md). Reads dryrun_pod1.jsonl written by launch/dryrun.py."""
+"""Roofline tables: (a) the decode-step kernel roofline — fused
+flash-decode+LoRA vs the unfused base-then-adapter sequence — and
+(b) the dry-run's JSONL records (§Roofline in EXPERIMENTS.md, written by
+launch/dryrun.py) when present.
+
+The kernel arms are analytic (HBM bytes + launch overheads on nominal
+accelerator numbers; NanoFlow's intra-device overlap analysis is the
+framing: decode attention is memory-bound, so the bound is bytes/BW).
+Fusing the LoRA delta into the flash-decode epilogue removes one kernel
+launch and the HBM round-trip of both the attention output and the
+delta, so the fused bound must beat the unfused bound at every shape —
+asserted when run under ``--smoke`` (the CI gate).
+"""
 from __future__ import annotations
 
 import json
 import os
 
-from .common import CsvOut
+from .common import CsvOut, is_smoke
+
+# nominal accelerator numbers (TPU v5e-class): the roofline *ratio* is
+# what the gate asserts, so absolute calibration only scales the table.
+HBM_GBPS = 819.0
+LAUNCH_US = 2.0          # per-kernel-launch overhead
+BYTES_PER = 2            # bf16
+
+
+def decode_rooflines(b: int, h: int, kv: int, d: int, s: int,
+                     dx: int, r: int, n_unique: int) -> dict:
+    """Analytic HBM traffic + time bounds for one decode step.
+
+    fused:   read q, K, V, x, A, B; write out            (1 launch)
+    unfused: flash (read q,K,V; write attn) + bgmv (read x,A,B; write
+             delta) + add (read attn,delta; write out)   (3 launches)
+
+    The unfused sequence pays 2 extra (B,H,D) transfers for the
+    attention output and 2 extra (B,o) = (B,H,D) transfers for the
+    delta, plus two extra launches.
+    """
+    out_b = b * h * d * BYTES_PER
+    attn_b = (b * h * d + 2 * b * s * kv * d) * BYTES_PER + out_b
+    lora_b = (b * dx + n_unique * (dx * r + r * h * d)) * BYTES_PER + out_b
+    fused_bytes = attn_b + lora_b - out_b          # one output write
+    unfused_bytes = attn_b + lora_b + 2 * out_b    # attn + delta bounce
+    fused_us = fused_bytes / HBM_GBPS / 1e3 + LAUNCH_US
+    unfused_us = unfused_bytes / HBM_GBPS / 1e3 + 3 * LAUNCH_US
+    return dict(fused_bytes=fused_bytes, unfused_bytes=unfused_bytes,
+                fused_us=fused_us, unfused_us=unfused_us,
+                speedup=unfused_us / fused_us)
 
 
 def main(out: CsvOut, path: str = "dryrun_pod1.jsonl") -> None:
+    # ---- kernel roofline: fused vs unfused decode step ---------------- #
+    shapes = [(4, 8, 2, 64, 512, 128, 16, 4)] if is_smoke() else \
+        [(8, 32, 8, 128, 4096, 4096, 16, 8),
+         (32, 32, 8, 128, 2048, 4096, 16, 16),
+         (128, 32, 8, 128, 1024, 4096, 32, 32)]
+    for (b, h, kv, d, s, dx, r, n) in shapes:
+        rf = decode_rooflines(b, h, kv, d, s, dx, r, n)
+        out.row(f"decode_unfused_b{b}_s{s}", rf["unfused_us"],
+                f"hbm_bytes={rf['unfused_bytes']};launches=3")
+        out.row(f"decode_fused_b{b}_s{s}", rf["fused_us"],
+                f"hbm_bytes={rf['fused_bytes']};launches=1;"
+                f"roofline_speedup={rf['speedup']:.3f}x")
+        if is_smoke():
+            # CI gate: the fused kernel's roofline target — strictly less
+            # HBM traffic and a strictly better time bound
+            assert rf["fused_bytes"] < rf["unfused_bytes"], \
+                "fused kernel must move strictly fewer HBM bytes"
+            assert rf["speedup"] > 1.0, \
+                "fused roofline bound must beat unfused"
+
+    # ---- dry-run records (optional) ----------------------------------- #
     if not os.path.exists(path):
-        out.row("missing", 0.0, f"run launch/dryrun.py first ({path})")
+        out.row("dryrun_missing", 0.0,
+                f"run launch/dryrun.py first ({path})")
         return
     for line in open(path):
         r = json.loads(line)

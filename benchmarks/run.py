@@ -48,6 +48,8 @@ SMOKE_BENCHES = (
     "fig_rebalancing",
     "fig_sched_policies",
     "fig_twin_speed",
+    "kernels_bench",
+    "roofline_report",
 )
 
 

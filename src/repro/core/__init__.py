@@ -2,8 +2,9 @@
 from .digital_twin import DigitalTwin, DTResult, EstimatorExecutor  # noqa
 from .fast_twin import FastEngine, FastTwin  # noqa
 from .sweep import SweepRunner, SweepTask  # noqa
-from .estimators import (FittedEstimators, collect_benchmark,  # noqa
-                         collect_memmax, fit_estimators)
+from .estimators import (FittedEstimators, MeasuredStepTimes,  # noqa
+                         collect_benchmark, collect_memmax,
+                         fit_estimators, fit_measured_step_times)
 from .forest import (MODEL_ZOO, DecisionTree, LinearRegression,  # noqa
                      RandomForest, Ridge)
 from .cluster_twin import ClusterDigitalTwin, ClusterDTResult  # noqa

@@ -52,8 +52,15 @@ class DTResult:
 
 class DigitalTwin:
     def __init__(self, est: FittedEstimators, mode: str = "full",
-                 max_running: int = 256, sched_policy: str = "fcfs"):
+                 max_running: int = 256, sched_policy: str = "fcfs",
+                 measured_step_times=None):
         assert mode in ("full", "mean")
+        # opt-in hook: a MeasuredStepTimes surface (fitted from real
+        # kernel launches by benchmarks/kernels_bench.py) replaces the
+        # analytic Lat_model x Lat_adapters terms.  None is provably a
+        # no-op (tests/test_measured_step_times.py pins bitwise equality).
+        if measured_step_times is not None:
+            est = est.with_measured(measured_step_times)
         self.est = est
         self.mode = mode
         self.max_running = max_running

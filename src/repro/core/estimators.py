@@ -20,13 +20,95 @@ only ever sees these fits — never the executor's hidden profile.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from ..serving.executor import StepTiming
 from ..serving.scheduler import StepPlan
 from ..serving.request import Request
+
+
+@dataclasses.dataclass
+class MeasuredStepTimes:
+    """Per-step decode-time surface fitted from kernel microbenchmarks.
+
+    The analytic ``Lat_model``/``Lat_adapters`` terms of Eq. (1) come
+    from controlled probes of a (possibly synthetic) executor;
+    ``MeasuredStepTimes`` replaces them with coefficients fitted from
+    *actual kernel launches* (``benchmarks/kernels_bench.py``'s
+    measurement mode: the fused flash-decode+LoRA kernel over a
+    (rank, batch, seq) grid), so twin/placement decisions reflect what
+    the hardware kernels really cost:
+
+        Lat_model(B, pf)  = c0 + cB·B + cBS·B·mean_seq + cBr·B·mean_rank
+                            + prefill_per_token · pf
+        Lat_adapters(A)   = m0 + m1·A   (unique-adapter multiplier)
+
+    All coefficients are seconds (multiplier dimensionless).  The hook is
+    strictly opt-in: a ``FittedEstimators`` with ``measured=None`` is
+    bitwise-identical to one fitted before this class existed (pinned by
+    ``tests/test_measured_step_times.py``).
+    """
+    decode: np.ndarray          # [c0, cB, cBS, cBr] seconds
+    prefill_per_token: float    # seconds per prefill token
+    adapters: np.ndarray        # [m0, m1] unique-adapter multiplier
+    mean_seq: float = 512.0     # decode context the surface is centred on
+    mean_rank: float = 8.0
+    source: str = "kernels_bench"
+
+    def lat_model(self, r_run: int, prefill_tokens: int = 0) -> float:
+        feats = [1.0, r_run, r_run * self.mean_seq, r_run * self.mean_rank]
+        return float(self.decode @ feats) \
+            + self.prefill_per_token * prefill_tokens
+
+    def lat_adapters(self, a_run: int) -> float:
+        if a_run == 0:
+            return 1.0
+        return float(self.adapters @ [1.0, a_run])
+
+
+def fit_measured_step_times(rows: List[dict], mean_seq: float = 512.0,
+                            mean_rank: float = 8.0) -> MeasuredStepTimes:
+    """Fit the measured step-time surface from kernel benchmark rows.
+
+    ``rows`` come from ``benchmarks.kernels_bench.collect_kernel_rows``:
+
+    * ``kind='decode'``   — batch, seq, rank, t (seconds): one fused
+      decode-step launch;
+    * ``kind='prefill'``  — tokens, t: one SGMV prefill launch;
+    * ``kind='adapters'`` — a_unique, mult: step-time multiplier versus
+      the single-adapter launch at the same shape.
+    """
+    dec = [r for r in rows if r["kind"] == "decode"]
+    if not dec:
+        raise ValueError("no decode rows to fit a step-time surface from")
+    fd = np.array([[1.0, r["batch"], r["batch"] * r["seq"],
+                    r["batch"] * r["rank"]] for r in dec])
+    decode, *_ = np.linalg.lstsq(fd, np.array([r["t"] for r in dec]),
+                                 rcond=None)
+
+    pf = [r for r in rows if r["kind"] == "prefill"]
+    if pf:
+        fp = np.array([[1.0, r["tokens"]] for r in pf])
+        coef, *_ = np.linalg.lstsq(fp, np.array([r["t"] for r in pf]),
+                                   rcond=None)
+        prefill_per_token = max(float(coef[1]), 0.0)
+    else:
+        prefill_per_token = 0.0
+
+    ad = [r for r in rows if r["kind"] == "adapters"]
+    if ad:
+        fa = np.array([[1.0, r["a_unique"]] for r in ad])
+        adapters, *_ = np.linalg.lstsq(
+            fa, np.array([r["mult"] for r in ad]), rcond=None)
+    else:
+        adapters = np.array([1.0, 0.0])
+
+    return MeasuredStepTimes(decode=decode,
+                             prefill_per_token=prefill_per_token,
+                             adapters=adapters, mean_seq=mean_seq,
+                             mean_rank=mean_rank)
 
 
 @dataclasses.dataclass
@@ -38,17 +120,30 @@ class FittedEstimators:
     load_disk_mult: float
     memmax: np.ndarray          # [base_tokens, per_slot_rank]
     prefill_term: bool = True
+    # opt-in: measured kernel step-time surface replacing the analytic
+    # Lat_model × Lat_adapters terms (None = paper-exact analytic path)
+    measured: Optional[MeasuredStepTimes] = None
 
     # ------------------------------------------------------------------ #
+    def with_measured(self, measured: Optional[MeasuredStepTimes]
+                      ) -> "FittedEstimators":
+        """Copy of these fits with the measured-kernel surface attached
+        (or detached, with ``None``)."""
+        return dataclasses.replace(self, measured=measured)
+
     def lat_sched(self, r_run: int, r_wait: int, slots: int, n: int) -> float:
         g_ratio = slots / max(n, 1)
         return float(self.sched @ [1.0, r_run, r_wait, r_wait * g_ratio])
 
     def lat_model(self, r_run: int, prefill_tokens: int = 0) -> float:
+        if self.measured is not None:
+            return self.measured.lat_model(r_run, prefill_tokens)
         pf = prefill_tokens if self.prefill_term else 0
         return float(self.model @ [1.0, r_run, pf])
 
     def lat_adapters(self, a_run: int) -> float:
+        if self.measured is not None:
+            return self.measured.lat_adapters(a_run)
         if a_run == 0:
             return 1.0
         return float(self.adapters @ [1.0, a_run])

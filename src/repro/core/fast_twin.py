@@ -819,8 +819,14 @@ class FastTwin:
     """
 
     def __init__(self, est: FittedEstimators, mode: str = "full",
-                 max_running: int = 256, sched_policy: str = "fcfs"):
+                 max_running: int = 256, sched_policy: str = "fcfs",
+                 measured_step_times=None):
         assert mode in ("full", "mean")
+        # same opt-in hook as DigitalTwin: attach the measured kernel
+        # step-time surface to the fits (dynamic-slot delegation passes
+        # self.est on, so the hook follows automatically)
+        if measured_step_times is not None:
+            est = est.with_measured(measured_step_times)
         self.est = est
         self.mode = mode
         self.max_running = max_running

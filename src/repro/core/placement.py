@@ -351,16 +351,22 @@ def find_optimal_placement(
         n_grid: Optional[Sequence[int]] = None,
         slot_grid=default_slot_grid, dt_mode: str = "mean",
         early_stop: int = 2, fast: bool = True,
-        sched_policy: str = "fcfs") -> PlacementResult:
+        sched_policy: str = "fcfs",
+        measured_step_times=None) -> PlacementResult:
     """Sweep served-adapter counts (and slots) through the DT.
 
     ``fast`` (default) runs each point on the struct-of-arrays
     ``FastTwin`` — identical labels to the legacy object-mode twin
     (``fast=False``, kept as the equivalence oracle), ~10x cheaper.
     ``sched_policy`` makes the scheduling policy a sweep axis: the same
-    workload can have a different (N*, G*) under e.g. ``adapter-fair``."""
-    dt = (FastTwin if fast else DigitalTwin)(est, mode=dt_mode,
-                                             sched_policy=sched_policy)
+    workload can have a different (N*, G*) under e.g. ``adapter-fair``.
+    ``measured_step_times`` (a ``MeasuredStepTimes``) swaps the analytic
+    Lat_model/Lat_adapters terms for kernel-measured fits, so the chosen
+    (N*, G*) reflects real kernel costs; ``None`` is bitwise the
+    pre-hook sweep."""
+    dt = (FastTwin if fast else DigitalTwin)(
+        est, mode=dt_mode, sched_policy=sched_policy,
+        measured_step_times=measured_step_times)
     if n_grid is None:
         n_grid = sorted({max(1, len(pool) // k) for k in
                          (16, 8, 4, 3, 2)} | {len(pool)})

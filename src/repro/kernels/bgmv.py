@@ -22,6 +22,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _bgmv_kernel(idx_ref, x_ref, a_ref, b_ref, o_ref, *, scale: float):
+    i = pl.program_id(0)
     x = x_ref[...]                                    # (1, d)
     a = a_ref[0]                                      # (d, r)
     b = b_ref[0]                                      # (r, o)
@@ -29,7 +30,10 @@ def _bgmv_kernel(idx_ref, x_ref, a_ref, b_ref, o_ref, *, scale: float):
                 preferred_element_type=jnp.float32)   # (1, r)
     y = jnp.dot(h, b.astype(jnp.float32),
                 preferred_element_type=jnp.float32)   # (1, o)
-    o_ref[...] = (y * scale).astype(o_ref.dtype)
+    # idx < 0 = base-model token: the index map clamped the DMA to
+    # adapter 0; mask its contribution to a zero delta here.
+    y = jnp.where(idx_ref[i] >= 0, y * scale, 0.0)
+    o_ref[...] = y.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
@@ -37,11 +41,16 @@ def bgmv(x, a, b, idx, scale: float = 1.0, interpret: bool = False):
     """y[t] = scale * x[t] @ A[idx[t]] @ B[idx[t]].
 
     x: (T, d); a: (N, d, r); b: (N, r, o); idx: (T,) int32 -> (T, o).
+    Tokens with idx < 0 (base model, no adapter) get a zero delta.
     """
     t, d = x.shape
     n, _, r = a.shape
     o = b.shape[-1]
     grid = (t,)
+
+    def _ab_map(i, idx_ref):
+        return (jnp.maximum(idx_ref[i], 0), 0, 0)
+
     out = pl.pallas_call(
         functools.partial(_bgmv_kernel, scale=scale),
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -49,8 +58,8 @@ def bgmv(x, a, b, idx, scale: float = 1.0, interpret: bool = False):
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),
-                pl.BlockSpec((1, d, r), lambda i, idx_ref: (idx_ref[i], 0, 0)),
-                pl.BlockSpec((1, r, o), lambda i, idx_ref: (idx_ref[i], 0, 0)),
+                pl.BlockSpec((1, d, r), _ab_map),
+                pl.BlockSpec((1, r, o), _ab_map),
             ],
             out_specs=pl.BlockSpec((1, o), lambda i, idx_ref: (i, 0)),
         ),

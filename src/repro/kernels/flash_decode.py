@@ -10,6 +10,17 @@ DMA-friendly, 128-aligned in the minor dimension.
 This is the serving engine's per-step attention hot spot: the Digital
 Twin's ``Lat_model`` estimator is dominated by exactly this kernel's
 memory-bound KV streaming.
+
+``flash_decode_lora`` fuses the per-request multi-adapter LoRA delta
+(BGMV) into the epilogue: one Pallas launch per decode step produces
+``attn(q, K, V) + scale * x @ A[idx] @ B[idx]``.  The per-request adapter
+id rides the same scalar-prefetch path as the valid lengths and drives
+the A/B BlockSpec index maps (the gather happens in the DMA engine, like
+``bgmv``); the online-softmax scratch is carried across KV blocks exactly
+as in the unfused kernel, and the delta is added once on the last block.
+Requests with ``idx < 0`` serve the base model (zero delta).  Versus the
+unfused base-then-adapter sequence this saves one kernel launch plus a
+round-trip of both the attention output and the delta through HBM.
 """
 from __future__ import annotations
 
@@ -103,3 +114,118 @@ def flash_decode(q, k, v, length, block_s: int = 512,
         out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
         interpret=interpret,
     )(lengths, q, k, v)
+
+
+def _fd_lora_kernel(len_ref, idx_ref, q_ref, k_ref, v_ref,
+                    x_ref, a_ref, b_ref, o_ref,
+                    m_ref, l_ref, acc_ref, *, block_s: int, n_blocks: int,
+                    scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                   # (H, D)
+    k = k_ref[0].astype(jnp.float32)                   # (Sb, KV, D)
+    v = v_ref[0].astype(jnp.float32)
+    h, d = q.shape
+    sb, kv, _ = k.shape
+    g = h // kv
+    qscale = 1.0 / (d ** 0.5)
+
+    qs = q.reshape(kv, g, d)
+    s = jax.lax.dot_general(
+        qs, k, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32) * qscale    # (KV, G, Sb)
+    pos = j * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, 1, sb), 2)
+    mask = pos < len_ref[b]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                 # (KV, G)
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(
+        p, v, (((2,), (0,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32)             # (KV, G, D)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(j == n_blocks - 1)
+    def _done():
+        attn = acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)[..., None]
+        attn = attn.reshape(h, d)
+        # LoRA epilogue: the A/B blocks for this request's adapter were
+        # DMAed by the index maps; two tiny MXU matmuls, then mask base
+        # requests (idx < 0) to a zero delta.
+        x = x_ref[...].astype(jnp.float32)              # (1, dx)
+        hh = jnp.dot(x, a_ref[0].astype(jnp.float32),
+                     preferred_element_type=jnp.float32)   # (1, r)
+        delta = jnp.dot(hh, b_ref[0].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)  # (1, H*D)
+        delta = jnp.where(idx_ref[b] >= 0, delta * scale, 0.0)
+        o_ref[0] = (attn + delta.reshape(h, d)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_s",
+                                             "interpret"))
+def flash_decode_lora(q, k, v, length, x, a, b, idx, scale: float = 1.0,
+                      block_s: int = 512, interpret: bool = False):
+    """Fused decode step: ``attn(q,K,V) + scale * x @ A[idx] @ B[idx]``.
+
+    q: (B, H, D); k/v: (B, S, KV, D); length: (B,) or scalar;
+    x: (B, dx); a: (N, dx, r); b: (N, r, H*D); idx: (B,) int32 adapter
+    ids (idx < 0 -> base model, zero delta).  One Pallas launch per step.
+    """
+    bsz, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    dx, r = a.shape[1], a.shape[2]
+    if b.shape[-1] != h * d:
+        raise ValueError(f"expand dim {b.shape[-1]} != H*D = {h * d}")
+    block_s = min(block_s, s)
+    while s % block_s:
+        block_s //= 2
+    n_blocks = s // block_s
+    lengths = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (bsz,))
+    ids = jnp.asarray(idx, jnp.int32)
+
+    def _ab_map(i, j, len_ref, idx_ref):
+        # clamp: base requests (id -1) must still name a DMA-able block;
+        # their delta is masked in the epilogue.
+        return (jnp.maximum(idx_ref[i], 0), 0, 0)
+
+    return pl.pallas_call(
+        functools.partial(_fd_lora_kernel, block_s=block_s,
+                          n_blocks=n_blocks, scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(bsz, n_blocks),
+            in_specs=[
+                pl.BlockSpec((1, h, d), lambda i, j, ln, ix: (i, 0, 0)),
+                pl.BlockSpec((1, block_s, kv, d),
+                             lambda i, j, ln, ix: (i, j, 0, 0)),
+                pl.BlockSpec((1, block_s, kv, d),
+                             lambda i, j, ln, ix: (i, j, 0, 0)),
+                pl.BlockSpec((1, dx), lambda i, j, ln, ix: (i, 0)),
+                pl.BlockSpec((1, dx, r), _ab_map),
+                pl.BlockSpec((1, r, h * d), _ab_map),
+            ],
+            out_specs=pl.BlockSpec((1, h, d),
+                                   lambda i, j, ln, ix: (i, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((kv, g), jnp.float32),
+                pltpu.VMEM((kv, g), jnp.float32),
+                pltpu.VMEM((kv, g, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, d), q.dtype),
+        interpret=interpret,
+    )(lengths, ids, q, k, v, x, a, b)

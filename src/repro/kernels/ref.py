@@ -10,6 +10,21 @@ import jax
 import jax.numpy as jnp
 
 
+def mask_ragged(a, b, ranks):
+    """Zero the padded LoRA lanes of a ragged-rank adapter bank.
+
+    a: (N, d, r_max); b: (N, r_max, o); ranks: (N,) with ranks[i] <= r_max.
+    Returns (a', b') where adapter i keeps only its first ranks[i] lanes —
+    the *dense per-rank oracle* weights: running any dense kernel on them
+    is exactly the ragged computation (padded lanes contribute literal
+    zeros).
+    """
+    r = a.shape[-1]
+    valid = jnp.arange(r)[None, :] < jnp.asarray(ranks)[:, None]   # (N, r)
+    return (jnp.where(valid[:, None, :], a, 0),
+            jnp.where(valid[:, :, None], b, 0))
+
+
 def lora_shrink_ref(x, a, idx):
     """x: (T, d); a: (N, d, r); idx: (T,) -> (T, r)."""
     return jnp.einsum("td,tdr->tr", x, a[idx],
@@ -26,9 +41,24 @@ def lora_ref(x, a, b, idx, scale: float = 1.0):
     """Fused y = scale * (x @ A[idx]) @ B[idx].
 
     x: (T, d); a: (N, d, r); b: (N, r, o); idx: (T,) -> (T, o).
+    Tokens with idx < 0 ("no adapter") get a zero delta.
     """
-    h = lora_shrink_ref(x, a, idx)
-    return (lora_expand_ref(h, b, idx) * jnp.asarray(scale, x.dtype))
+    idx = jnp.asarray(idx)
+    idx0 = jnp.maximum(idx, 0)
+    h = lora_shrink_ref(x, a, idx0)
+    y = lora_expand_ref(h, b, idx0) * jnp.asarray(scale, x.dtype)
+    return jnp.where((idx >= 0)[:, None], y, 0)
+
+
+def lora_ref_ragged(x, a, b, idx, ranks, scale: float = 1.0):
+    """Ragged-rank oracle: adapter i uses only its first ranks[i] lanes.
+
+    Defined as the dense oracle over `mask_ragged` weights, so any kernel
+    claiming ragged support can be tested *bitwise* against its own dense
+    path on the masked bank.
+    """
+    am, bm = mask_ragged(a, b, ranks)
+    return lora_ref(x, am, bm, idx, scale)
 
 
 def lora_ref_bucketed(x, a, b, idx, scale: float = 1.0,
@@ -45,19 +75,21 @@ def lora_ref_bucketed(x, a, b, idx, scale: float = 1.0,
     """
     t, d = x.shape
     n, _, r = a.shape
+    idx = jnp.asarray(idx)
     cap = min(t, int(overprovision * -(-t // n)) + 8)
-    onehot = jax.nn.one_hot(idx, n, dtype=jnp.int32)
+    onehot = jax.nn.one_hot(idx, n, dtype=jnp.int32)   # idx<0 -> all-zero row
     pos = jnp.cumsum(onehot, axis=0) - onehot
     pos = jnp.sum(pos * onehot, axis=1)
-    keep = pos < cap
+    keep = (pos < cap) & (idx >= 0)
     posc = jnp.where(keep, pos, cap)
+    idx0 = jnp.maximum(idx, 0)
     buf = jnp.zeros((n, cap + 1, d), x.dtype)
-    buf = buf.at[idx, posc].set(jnp.where(keep[:, None], x, 0))
+    buf = buf.at[idx0, posc].set(jnp.where(keep[:, None], x, 0))
     h = jnp.einsum("ncd,ndr->ncr", buf[:, :cap], a,
                    preferred_element_type=jnp.float32).astype(x.dtype)
     y = jnp.einsum("ncr,nro->nco", h, b,
                    preferred_element_type=jnp.float32).astype(x.dtype)
-    out = y[idx, posc.clip(0, cap - 1)]
+    out = y[idx0, posc.clip(0, cap - 1)]
     out = jnp.where(keep[:, None], out, 0)
     return out * jnp.asarray(scale, x.dtype)
 
@@ -80,3 +112,20 @@ def flash_decode_ref(q, k, v, length):
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
     return out.reshape(b, h, d).astype(q.dtype)
+
+
+def fused_decode_ref(q, k, v, length, x, a, b, idx, scale: float = 1.0):
+    """Composed oracle for the fused decode kernel:
+
+        attn(q, K, V)  +  scale * x @ A[idx] @ B[idx]   (reshaped (H, D))
+
+    q: (B, H, D); k/v: (B, S, KV, D); x: (B, dx); a: (N, dx, r);
+    b: (N, r, H*D); idx: (B,) per-request adapter ids, -1 = base model
+    (zero delta).  This is literally ``flash_decode_ref`` + ``lora_ref``
+    — the fused kernel is tested against this composition.
+    """
+    bsz, h, d = q.shape
+    attn = flash_decode_ref(q, k, v, length)
+    delta = lora_ref(x, a, b, idx, scale).reshape(bsz, h, d)
+    return (attn.astype(jnp.float32)
+            + delta.astype(jnp.float32)).astype(q.dtype)

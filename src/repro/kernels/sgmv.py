@@ -10,6 +10,15 @@ scatter the results back to token order.
 The capacity buffer costs O(N·C·d) HBM but C is bounded by the wrapper to
 ceil(T/N)·overprovision, and prefill T is large exactly when the buffer is
 efficient (the paper's serving regime batches many requests per adapter).
+
+Ragged per-adapter ranks: pass ``ranks`` (shape (N,), ranks[i] <= r_max)
+and adapter i uses only its first ranks[i] LoRA lanes.  The per-adapter
+rank arrives via scalar prefetch and masks the padded lanes of A's columns
+and B's rows *before* the shrink/expand matmuls, so the result is bitwise
+equal to running the dense kernel on a zero-padded bank
+(``ref.mask_ragged`` is exactly that oracle).  This is the S-LoRA
+heterogeneous-rank batched regime: one bank sized r_max, no per-rank
+re-bucketing, no wasted FLOP correctness hazard.
 """
 from __future__ import annotations
 
@@ -18,6 +27,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _sgmv_kernel(x_ref, a_ref, b_ref, o_ref, *, scale: float):
@@ -31,46 +41,94 @@ def _sgmv_kernel(x_ref, a_ref, b_ref, o_ref, *, scale: float):
     o_ref[0] = (y * scale).astype(o_ref.dtype)
 
 
+def _sgmv_ragged_kernel(rank_ref, x_ref, a_ref, b_ref, o_ref, *,
+                        scale: float):
+    i = pl.program_id(0)
+    x = x_ref[0]                                      # (Cb, d)
+    a = a_ref[0]                                      # (d, r_max)
+    b = b_ref[0]                                      # (r_max, o)
+    r = a.shape[-1]
+    # mask padded lanes BEFORE the matmuls: the arithmetic then matches
+    # the dense kernel on mask_ragged-ed weights value-for-value, which
+    # makes ragged == dense-on-masked-bank a bitwise identity.
+    lane_cols = jax.lax.broadcasted_iota(jnp.int32, (1, r), 1)
+    lane_rows = jax.lax.broadcasted_iota(jnp.int32, (r, 1), 0)
+    a = jnp.where(lane_cols < rank_ref[i], a, 0)
+    b = jnp.where(lane_rows < rank_ref[i], b, 0)
+    h = jnp.dot(x.astype(jnp.float32), a.astype(jnp.float32),
+                preferred_element_type=jnp.float32)   # (Cb, r_max)
+    y = jnp.dot(h, b.astype(jnp.float32),
+                preferred_element_type=jnp.float32)   # (Cb, o)
+    o_ref[0] = (y * scale).astype(o_ref.dtype)
+
+
 def _grouped_matmul(xbuf, a, b, scale: float, interpret: bool,
-                    block_c: int = 128):
-    """xbuf: (N, C, d) -> (N, C, o) with per-group A/B."""
+                    ranks=None, block_c: int = 128):
+    """xbuf: (N, C, d) -> (N, C, o) with per-group A/B.
+
+    ``ranks`` (N,) enables the ragged kernel: per-adapter rank rides the
+    scalar-prefetch path and masks the padded lanes in-kernel.
+    """
     n, c, d = xbuf.shape
     r, o = a.shape[-1], b.shape[-1]
     nc = max(c // block_c, 1)
     block_c = c // nc
+    if ranks is None:
+        return pl.pallas_call(
+            functools.partial(_sgmv_kernel, scale=scale),
+            grid=(n, nc),
+            in_specs=[
+                pl.BlockSpec((1, block_c, d), lambda i, j: (i, j, 0)),
+                pl.BlockSpec((1, d, r), lambda i, j: (i, 0, 0)),
+                pl.BlockSpec((1, r, o), lambda i, j: (i, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, block_c, o), lambda i, j: (i, j, 0)),
+            out_shape=jax.ShapeDtypeStruct((n, c, o), xbuf.dtype),
+            interpret=interpret,
+        )(xbuf, a, b)
     return pl.pallas_call(
-        functools.partial(_sgmv_kernel, scale=scale),
-        grid=(n, nc),
-        in_specs=[
-            pl.BlockSpec((1, block_c, d), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((1, d, r), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((1, r, o), lambda i, j: (i, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, block_c, o), lambda i, j: (i, j, 0)),
+        functools.partial(_sgmv_ragged_kernel, scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n, nc),
+            in_specs=[
+                pl.BlockSpec((1, block_c, d), lambda i, j, rk: (i, j, 0)),
+                pl.BlockSpec((1, d, r), lambda i, j, rk: (i, 0, 0)),
+                pl.BlockSpec((1, r, o), lambda i, j, rk: (i, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, block_c, o),
+                                   lambda i, j, rk: (i, j, 0)),
+        ),
         out_shape=jax.ShapeDtypeStruct((n, c, o), xbuf.dtype),
         interpret=interpret,
-    )(xbuf, a, b)
+    )(jnp.asarray(ranks, jnp.int32), xbuf, a, b)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret"))
-def sgmv(x, a, b, idx, scale: float = 1.0, interpret: bool = False):
+def sgmv(x, a, b, idx, scale: float = 1.0, ranks=None,
+         interpret: bool = False):
     """y[t] = scale * x[t] @ A[idx[t]] @ B[idx[t]] (prefill-sized T).
 
     x: (T, d); a: (N, d, r); b: (N, r, o); idx: (T,) -> (T, o).
+    Tokens with idx < 0 get a zero delta.  ``ranks`` (N,) makes the bank
+    ragged: adapter i uses only its first ranks[i] <= r lanes.
     """
     t, d = x.shape
     n = a.shape[0]
+    idx = jnp.asarray(idx)
     # bucket tokens by adapter (dropless: capacity covers the worst case
     # sized by 2x mean + 128, clamped to T)
     cap = min(t, int(2 * -(-t // n)) + 128)
     cap = -(-cap // 128) * 128
-    onehot = jax.nn.one_hot(idx, n, dtype=jnp.int32)       # (T, N)
+    onehot = jax.nn.one_hot(idx, n, dtype=jnp.int32)       # idx<0 -> zeros
     pos = jnp.cumsum(onehot, axis=0) - onehot
     pos = jnp.sum(pos * onehot, axis=1)                    # (T,)
-    keep = pos < cap
+    keep = (pos < cap) & (idx >= 0)
     posc = jnp.where(keep, pos, cap)
+    idx0 = jnp.maximum(idx, 0)
     xbuf = jnp.zeros((n, cap + 1, d), x.dtype)
-    xbuf = xbuf.at[idx, posc].set(jnp.where(keep[:, None], x, 0))
-    ybuf = _grouped_matmul(xbuf[:, :cap], a, b, scale, interpret)
-    y = ybuf[idx, posc.clip(0, cap - 1)]
+    xbuf = xbuf.at[idx0, posc].set(jnp.where(keep[:, None], x, 0))
+    ybuf = _grouped_matmul(xbuf[:, :cap], a, b, scale, interpret,
+                           ranks=ranks)
+    y = ybuf[idx0, posc.clip(0, cap - 1)]
     return jnp.where(keep[:, None], y, 0).astype(x.dtype)

@@ -1,0 +1,255 @@
+"""Always-on kernel edge cases (no hypothesis dependency).
+
+The property harness in tests/test_kernels_property.py needs hypothesis,
+which the dev extra provides but a bare environment may not have; this
+suite pins the kernel edge cases with plain pytest so kernel correctness
+is verified everywhere the repo's tests run at all.
+
+Covered edges: token counts not divisible by the kernel block size,
+rank-1 adapters, a single-adapter bank, expand dim larger than the input
+dim (o > d), mixed f32/bf16 inputs, the sgmv capacity-buffer overflow
+contract, the ragged-rank bitwise identity, and fused-decode odd shapes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.bgmv import bgmv
+from repro.kernels.flash_decode import flash_decode, flash_decode_lora
+from repro.kernels.ops import fused_decode, lora_apply
+from repro.kernels.sgmv import sgmv
+
+
+def _close(got, want, dtype, tol=None):
+    tol = tol or (2e-5 if dtype == jnp.float32 else 3e-2)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def _bank(key, t, d, r, o, n, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (t, d), dtype)
+    a = (jax.random.normal(ks[1], (n, d, r), jnp.float32) * 0.1).astype(dtype)
+    b = (jax.random.normal(ks[2], (n, r, o), jnp.float32) * 0.1).astype(dtype)
+    return x, a, b
+
+
+# --------------------------------------------------------------------- #
+# block-size edges
+# --------------------------------------------------------------------- #
+
+def test_sgmv_tokens_not_divisible_by_block():
+    # T = 130: capacity buckets round to 128, tokens straddle the block
+    # boundary of the grouped matmul's (adapters x capacity-block) grid.
+    key = jax.random.PRNGKey(0)
+    x, a, b = _bank(key, 130, 32, 8, 48, 3)
+    idx = jax.random.randint(key, (130,), -1, 3).astype(jnp.int32)
+    got = sgmv(x, a, b, idx, 1.0, interpret=True)
+    _close(got, ref.lora_ref(x, a, b, idx, 1.0), jnp.float32)
+
+
+@pytest.mark.parametrize("s,block_s", [(100, 512), (33, 16), (7, 512)])
+def test_flash_decode_seq_not_divisible_by_block(s, block_s):
+    # block_s halves until it divides S; odd S must still be exact.
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (2, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (2, s, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (2, s, 2, 16), jnp.float32)
+    length = jax.random.randint(ks[3], (2,), 1, s + 1).astype(jnp.int32)
+    got = flash_decode(q, k, v, length, block_s=block_s, interpret=True)
+    _close(got, ref.flash_decode_ref(q, k, v, length), jnp.float32)
+
+
+# --------------------------------------------------------------------- #
+# rank-1, single adapter, o > d
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("kernel", [bgmv, sgmv])
+def test_rank_one(kernel):
+    key = jax.random.PRNGKey(2)
+    x, a, b = _bank(key, 8, 32, 1, 32, 4)
+    idx = jnp.array([0, 1, 2, 3, -1, 0, 1, 2], jnp.int32)
+    got = kernel(x, a, b, idx, 2.0, interpret=True)
+    _close(got, ref.lora_ref(x, a, b, idx, 2.0), jnp.float32)
+
+
+@pytest.mark.parametrize("kernel", [bgmv, sgmv])
+def test_single_adapter_bank(kernel):
+    key = jax.random.PRNGKey(3)
+    x, a, b = _bank(key, 6, 16, 4, 24, 1)
+    idx = jnp.zeros((6,), jnp.int32)
+    got = kernel(x, a, b, idx, 1.0, interpret=True)
+    _close(got, ref.lora_ref(x, a, b, idx, 1.0), jnp.float32)
+
+
+@pytest.mark.parametrize("kernel", [bgmv, sgmv])
+def test_expand_wider_than_input(kernel):
+    # o > d: LoRA up-projection wider than the input activation
+    key = jax.random.PRNGKey(4)
+    x, a, b = _bank(key, 8, 16, 4, 192, 3)
+    idx = jax.random.randint(key, (8,), 0, 3).astype(jnp.int32)
+    got = kernel(x, a, b, idx, 1.0, interpret=True)
+    _close(got, ref.lora_ref(x, a, b, idx, 1.0), jnp.float32)
+
+
+# --------------------------------------------------------------------- #
+# mixed dtypes
+# --------------------------------------------------------------------- #
+
+def test_mixed_dtype_inputs_bgmv():
+    # bf16 activations against an f32 adapter bank (the serving engine
+    # keeps the bank in weight dtype); accumulation is f32 either way,
+    # output follows x.dtype.
+    key = jax.random.PRNGKey(5)
+    x, a, b = _bank(key, 8, 32, 8, 32, 2, jnp.bfloat16)
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+    idx = jnp.array([0, 1, 0, 1, -1, 0, 1, 0], jnp.int32)
+    got = bgmv(x, a32, b32, idx, 1.0, interpret=True)
+    assert got.dtype == jnp.bfloat16
+    _close(got, ref.lora_ref(x, a32, b32, idx, 1.0), jnp.bfloat16)
+
+
+def test_mixed_dtype_inputs_fused_decode():
+    key = jax.random.PRNGKey(6)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (2, 4, 16), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (2, 64, 2, 16), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (2, 64, 2, 16), jnp.bfloat16)
+    x, a, b = _bank(jax.random.fold_in(key, 1), 2, 32, 8, 4 * 16, 3,
+                    jnp.float32)
+    x = x.astype(jnp.bfloat16)
+    idx = jnp.array([1, -1], jnp.int32)
+    length = jnp.array([40, 64], jnp.int32)
+    got = flash_decode_lora(q, k, v, length, x, a, b, idx, 1.0,
+                            interpret=True)
+    assert got.dtype == jnp.bfloat16
+    _close(got, ref.fused_decode_ref(q, k, v, length, x, a, b, idx, 1.0),
+           jnp.bfloat16)
+
+
+# --------------------------------------------------------------------- #
+# sgmv capacity-buffer overflow
+# --------------------------------------------------------------------- #
+
+def test_sgmv_capacity_overflow_contract():
+    # T=512 tokens all on adapter 0 of an N=8 bank: capacity is
+    # min(T, 2*ceil(T/N) + 128) = 256.  The documented contract: the
+    # first 256 tokens (in arrival order) get the exact delta, tokens
+    # over capacity fall back to exactly 0 — same as the ref bucketed
+    # oracle, never garbage.
+    key = jax.random.PRNGKey(7)
+    x, a, b = _bank(key, 512, 32, 8, 32, 8)
+    idx = jnp.zeros((512,), jnp.int32)
+    got = np.asarray(sgmv(x, a, b, idx, 1.0, interpret=True))
+    want = np.asarray(ref.lora_ref(x, a, b, idx, 1.0))
+    np.testing.assert_allclose(got[:256], want[:256], rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(got[256:], np.zeros_like(got[256:]))
+
+
+def test_sgmv_no_overflow_when_balanced():
+    # Balanced load at the same T never trips the capacity clamp.
+    key = jax.random.PRNGKey(8)
+    x, a, b = _bank(key, 512, 32, 8, 32, 8)
+    idx = (jnp.arange(512, dtype=jnp.int32) % 8)
+    got = sgmv(x, a, b, idx, 1.0, interpret=True)
+    _close(got, ref.lora_ref(x, a, b, idx, 1.0), jnp.float32)
+
+
+# --------------------------------------------------------------------- #
+# ragged ranks: the bitwise identity
+# --------------------------------------------------------------------- #
+
+def test_sgmv_ragged_bitwise_vs_dense_masked_bank():
+    key = jax.random.PRNGKey(9)
+    x, a, b = _bank(key, 192, 32, 16, 48, 4)
+    ranks = jnp.array([1, 16, 7, 4], jnp.int32)
+    idx = jax.random.randint(key, (192,), -1, 4).astype(jnp.int32)
+    ragged = sgmv(x, a, b, idx, 1.0, ranks=ranks, interpret=True)
+    am, bm = ref.mask_ragged(a, b, ranks)
+    dense = sgmv(x, am, bm, idx, 1.0, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ragged), np.asarray(dense))
+    _close(ragged, ref.lora_ref_ragged(x, a, b, idx, ranks, 1.0),
+           jnp.float32)
+
+
+def test_lora_apply_ragged_routes_both_kernels():
+    # ops.lora_apply with ranks= must agree with the ragged oracle on the
+    # bgmv path (decode-sized T) and the sgmv path (prefill-sized T).
+    key = jax.random.PRNGKey(10)
+    ranks = jnp.array([2, 8, 5], jnp.int32)
+    for t in (4, 96):   # 4 <= N*4 -> bgmv; 96 > N*4 -> sgmv
+        x, a, b = _bank(jax.random.fold_in(key, t), t, 16, 8, 24, 3)
+        idx = jax.random.randint(key, (t,), -1, 3).astype(jnp.int32)
+        got = lora_apply(x, a, b, idx, 1.0, ranks=ranks, force="interpret")
+        _close(got, ref.lora_ref_ragged(x, a, b, idx, ranks, 1.0),
+               jnp.float32)
+
+
+# --------------------------------------------------------------------- #
+# fused decode edge shapes
+# --------------------------------------------------------------------- #
+
+def test_fused_decode_batch_one_rank_one():
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (1, 2, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 48, 1, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 48, 1, 16), jnp.float32)
+    x, a, b = _bank(jax.random.fold_in(key, 1), 1, 16, 1, 2 * 16, 1)
+    idx = jnp.array([0], jnp.int32)
+    got = flash_decode_lora(q, k, v, jnp.array([20], jnp.int32),
+                            x, a, b, idx, 3.0, interpret=True)
+    _close(got, ref.fused_decode_ref(q, k, v, jnp.array([20], jnp.int32),
+                                     x, a, b, idx, 3.0), jnp.float32)
+
+
+def test_fused_decode_all_base_matches_flash_decode_bitwise():
+    # every request id -1: the fused kernel must reduce to plain
+    # flash-decode exactly (the masked delta is a literal 0.0 add in f32
+    # before the output cast, so outputs are bitwise identical).
+    key = jax.random.PRNGKey(12)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (3, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (3, 64, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (3, 64, 2, 16), jnp.float32)
+    x, a, b = _bank(jax.random.fold_in(key, 1), 3, 32, 8, 4 * 16, 2)
+    length = jnp.array([10, 64, 33], jnp.int32)
+    idx = jnp.full((3,), -1, jnp.int32)
+    fused = flash_decode_lora(q, k, v, length, x, a, b, idx, 1.0,
+                              interpret=True)
+    plain = flash_decode(q, k, v, length, interpret=True)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(plain))
+
+
+def test_fused_decode_expand_dim_mismatch_raises():
+    key = jax.random.PRNGKey(13)
+    q = jnp.zeros((1, 4, 16), jnp.float32)
+    k = v = jnp.zeros((1, 32, 2, 16), jnp.float32)
+    x, a, b = _bank(key, 1, 16, 4, 4 * 16 + 8, 1)  # o != H*D
+    with pytest.raises(ValueError, match="expand dim"):
+        flash_decode_lora(q, k, v, 8, x, a, b, jnp.array([0], jnp.int32),
+                          interpret=True)
+
+
+def test_fused_decode_dispatch_entry_point():
+    # ops.fused_decode: ref mode == interpret mode == composed oracle,
+    # including a ragged bank.
+    key = jax.random.PRNGKey(14)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (2, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 64, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 64, 2, 16), jnp.float32)
+    x, a, b = _bank(jax.random.fold_in(key, 1), 2, 32, 8, 4 * 16, 3)
+    ranks = jnp.array([8, 3, 1], jnp.int32)
+    idx = jnp.array([2, 0], jnp.int32)
+    length = jnp.array([64, 17], jnp.int32)
+    am, bm = ref.mask_ragged(a, b, ranks)
+    want = ref.fused_decode_ref(q, k, v, length, x, am, bm, idx, 1.0)
+    for mode in ("ref", "interpret"):
+        got = fused_decode(q, k, v, length, x, a, b, idx, 1.0,
+                           ranks=ranks, force=mode)
+        _close(got, want, jnp.float32)

@@ -1,0 +1,251 @@
+"""Property-based kernel test harness.
+
+Hypothesis strategies over (T, d, r, o, N, block sizes, dtype,
+adapter-id distributions) asserting interpret-mode Pallas == the pure-jnp
+oracles in ``repro.kernels.ref`` within documented tolerance, for every
+kernel: bgmv, sgmv (dense + ragged ranks), flash_decode, and the fused
+flash-decode+LoRA kernel.
+
+Adapter-id distributions cover the serving engine's real shapes:
+``random`` (mixed batch), ``all-same`` (one hot adapter), ``all-distinct``
+(worst-case gather), ``with-empty`` (some adapters receive zero tokens),
+and ``all-base`` (every token id -1 — base model, zero delta).
+
+Documented tolerances: f32 2e-5 / bf16 3e-2 (fp32 accumulation inside
+every kernel; bf16 rounds once on the way out).  The ragged-rank sgmv is
+additionally pinned *bitwise* against its own dense path on a
+``mask_ragged`` zero-padded bank in tests/test_kernels_edge.py.
+
+Heavier sweeps are marked ``slow`` (nightly full CI job only).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.kernels import ref
+from repro.kernels.bgmv import bgmv
+from repro.kernels.flash_decode import flash_decode, flash_decode_lora
+from repro.kernels.sgmv import sgmv
+
+DTYPES = (jnp.float32, jnp.bfloat16)
+ID_KINDS = ("random", "all-same", "all-distinct", "with-empty", "all-base")
+
+
+def _tol(dtype):
+    return 2e-5 if dtype == jnp.float32 else 3e-2
+
+
+def _assert_close(got, want, dtype, tol_scale: float = 1.0):
+    tol = _tol(dtype) * tol_scale
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def _ids(key, kind: str, t: int, n: int):
+    """One adapter-id vector of the named distribution."""
+    if kind == "all-same":
+        return jnp.full((t,), int(jax.random.randint(key, (), 0, n)),
+                        jnp.int32)
+    if kind == "all-distinct":
+        return (jnp.arange(t, dtype=jnp.int32) % n)
+    if kind == "with-empty":
+        # at most half the adapters receive tokens; the rest stay empty
+        used = max(n // 2, 1)
+        return jax.random.randint(key, (t,), 0, used).astype(jnp.int32)
+    if kind == "all-base":
+        return jnp.full((t,), -1, jnp.int32)
+    return jax.random.randint(key, (t,), -1, n).astype(jnp.int32)
+
+
+def _lora_bank(key, t, d, r, o, n, dtype):
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (t, d), dtype)
+    a = (jax.random.normal(ks[1], (n, d, r), jnp.float32) * 0.1).astype(dtype)
+    b = (jax.random.normal(ks[2], (n, r, o), jnp.float32) * 0.1).astype(dtype)
+    return x, a, b
+
+
+# --------------------------------------------------------------------- #
+# bgmv
+# --------------------------------------------------------------------- #
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.integers(1, 12), d=st.sampled_from([16, 64, 96]),
+       r=st.sampled_from([1, 4, 16]), o=st.sampled_from([16, 48, 128]),
+       n=st.integers(1, 5), kind=st.sampled_from(ID_KINDS),
+       dtype=st.sampled_from(DTYPES), seed=st.integers(0, 2 ** 16))
+def test_bgmv_property(t, d, r, o, n, kind, dtype, seed):
+    key = jax.random.PRNGKey(seed)
+    x, a, b = _lora_bank(key, t, d, r, o, n, dtype)
+    idx = _ids(jax.random.fold_in(key, 1), kind, t, n)
+    got = bgmv(x, a, b, idx, 1.25, interpret=True)
+    want = ref.lora_ref(x, a, b, idx, 1.25)
+    _assert_close(got, want, dtype)
+
+
+# --------------------------------------------------------------------- #
+# sgmv (dense + ragged ranks)
+# --------------------------------------------------------------------- #
+
+@settings(max_examples=8, deadline=None)
+@given(t=st.sampled_from([64, 130, 256]), d=st.sampled_from([16, 64]),
+       r=st.sampled_from([1, 8, 16]), o=st.sampled_from([32, 96]),
+       n=st.integers(1, 6), kind=st.sampled_from(ID_KINDS),
+       dtype=st.sampled_from(DTYPES), seed=st.integers(0, 2 ** 16))
+def test_sgmv_property(t, d, r, o, n, kind, dtype, seed):
+    key = jax.random.PRNGKey(seed)
+    x, a, b = _lora_bank(key, t, d, r, o, n, dtype)
+    idx = _ids(jax.random.fold_in(key, 1), kind, t, n)
+    got = sgmv(x, a, b, idx, 1.0, interpret=True)
+    want = ref.lora_ref(x, a, b, idx, 1.0)
+    _assert_close(got, want, dtype)
+
+
+@settings(max_examples=8, deadline=None)
+@given(t=st.sampled_from([64, 192]), n=st.integers(1, 6),
+       r_max=st.sampled_from([4, 8, 16]), kind=st.sampled_from(ID_KINDS),
+       seed=st.integers(0, 2 ** 16))
+def test_sgmv_ragged_property(t, n, r_max, kind, seed):
+    """Ragged ranks: padded lanes masked in the shrink matmul must equal
+    the dense per-rank oracle (and stay bitwise vs the dense kernel on a
+    masked bank — pinned in the edge suite; tolerance vs jnp here)."""
+    key = jax.random.PRNGKey(seed)
+    d, o = 32, 48
+    x, a, b = _lora_bank(key, t, d, r_max, o, n, jnp.float32)
+    ranks = jax.random.randint(jax.random.fold_in(key, 2), (n,), 1,
+                               r_max + 1).astype(jnp.int32)
+    idx = _ids(jax.random.fold_in(key, 1), kind, t, n)
+    got = sgmv(x, a, b, idx, 1.0, ranks=ranks, interpret=True)
+    am, bm = ref.mask_ragged(a, b, ranks)
+    dense = sgmv(x, am, bm, idx, 1.0, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(dense))
+    want = ref.lora_ref_ragged(x, a, b, idx, ranks, 1.0)
+    _assert_close(got, want, jnp.float32)
+
+
+# --------------------------------------------------------------------- #
+# flash decode
+# --------------------------------------------------------------------- #
+
+@settings(max_examples=8, deadline=None)
+@given(b=st.integers(1, 3), kv=st.sampled_from([1, 2, 4]),
+       g=st.sampled_from([1, 2, 4]), d=st.sampled_from([16, 32, 64]),
+       s=st.sampled_from([33, 64, 100, 256]),
+       block_s=st.sampled_from([16, 32, 64, 512]),
+       dtype=st.sampled_from(DTYPES), seed=st.integers(0, 2 ** 16))
+def test_flash_decode_property(b, kv, g, d, s, block_s, dtype, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    h = kv * g
+    q = jax.random.normal(ks[0], (b, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, d), dtype)
+    length = jax.random.randint(ks[3], (b,), 1, s + 1).astype(jnp.int32)
+    got = flash_decode(q, k, v, length, block_s=block_s, interpret=True)
+    want = ref.flash_decode_ref(q, k, v, length)
+    _assert_close(got, want, dtype)
+
+
+# --------------------------------------------------------------------- #
+# fused flash-decode + LoRA
+# --------------------------------------------------------------------- #
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 3), kv=st.sampled_from([1, 2]),
+       g=st.sampled_from([1, 4]), d=st.sampled_from([16, 32]),
+       s=st.sampled_from([48, 64, 144]),
+       block_s=st.sampled_from([16, 32, 512]),
+       dx=st.sampled_from([16, 48]), r=st.sampled_from([1, 8]),
+       n=st.integers(1, 4), kind=st.sampled_from(ID_KINDS),
+       dtype=st.sampled_from(DTYPES), seed=st.integers(0, 2 ** 16))
+def test_fused_decode_property(b, kv, g, d, s, block_s, dx, r, n, kind,
+                               dtype, seed):
+    """The fused kernel must match the *composed* reference
+    (ref.flash_decode_ref + ref.lora_ref) across the whole grid,
+    including base-model rows (id -1) and partial valid lengths."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    h = kv * g
+    q = jax.random.normal(ks[0], (b, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, d), dtype)
+    x, a, bw = _lora_bank(jax.random.fold_in(key, 1), b, dx, r, h * d,
+                          n, dtype)
+    idx = _ids(jax.random.fold_in(key, 2), kind, b, n)
+    length = jax.random.randint(ks[3], (b,), 1, s + 1).astype(jnp.int32)
+    got = flash_decode_lora(q, k, v, length, x, a, bw, idx, 1.5,
+                            block_s=block_s, interpret=True)
+    want = ref.fused_decode_ref(q, k, v, length, x, a, bw, idx, 1.5)
+    _assert_close(got, want, dtype)
+
+
+# --------------------------------------------------------------------- #
+# heavy sweeps — nightly only
+# --------------------------------------------------------------------- #
+
+@pytest.mark.slow
+@settings(max_examples=60, deadline=None)
+@given(t=st.integers(1, 40), d=st.sampled_from([16, 64, 128, 256]),
+       r=st.sampled_from([1, 2, 4, 8, 16, 32]),
+       o=st.sampled_from([16, 64, 256, 384]), n=st.integers(1, 12),
+       kind=st.sampled_from(ID_KINDS), dtype=st.sampled_from(DTYPES),
+       seed=st.integers(0, 2 ** 20))
+def test_bgmv_property_heavy(t, d, r, o, n, kind, dtype, seed):
+    key = jax.random.PRNGKey(seed)
+    x, a, b = _lora_bank(key, t, d, r, o, n, dtype)
+    idx = _ids(jax.random.fold_in(key, 1), kind, t, n)
+    got = bgmv(x, a, b, idx, 0.75, interpret=True)
+    want = ref.lora_ref(x, a, b, idx, 0.75)
+    _assert_close(got, want, dtype)
+
+
+@pytest.mark.slow
+@settings(max_examples=40, deadline=None)
+@given(t=st.integers(129, 700), n=st.integers(1, 16),
+       r_max=st.sampled_from([2, 8, 32]), kind=st.sampled_from(ID_KINDS),
+       dtype=st.sampled_from(DTYPES), seed=st.integers(0, 2 ** 20))
+def test_sgmv_ragged_property_heavy(t, n, r_max, kind, dtype, seed):
+    key = jax.random.PRNGKey(seed)
+    d, o = 64, 64
+    x, a, b = _lora_bank(key, t, d, r_max, o, n, dtype)
+    ranks = jax.random.randint(jax.random.fold_in(key, 2), (n,), 1,
+                               r_max + 1).astype(jnp.int32)
+    idx = _ids(jax.random.fold_in(key, 1), kind, t, n)
+    got = sgmv(x, a, b, idx, 1.0, ranks=ranks, interpret=True)
+    am, bm = ref.mask_ragged(a, b, ranks)
+    dense = sgmv(x, am, bm, idx, 1.0, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(dense))
+    want = ref.lora_ref_ragged(x, a, b, idx, ranks, 1.0)
+    _assert_close(got, want, dtype)
+
+
+@pytest.mark.slow
+@settings(max_examples=40, deadline=None)
+@given(b=st.integers(1, 6), kv=st.sampled_from([1, 2, 4, 8]),
+       g=st.sampled_from([1, 2, 4]), d=st.sampled_from([32, 64, 128]),
+       s=st.integers(2, 1024), block_s=st.sampled_from([16, 64, 256, 512]),
+       dx=st.sampled_from([32, 128]), r=st.sampled_from([1, 8, 32]),
+       n=st.integers(1, 8), kind=st.sampled_from(ID_KINDS),
+       dtype=st.sampled_from(DTYPES), seed=st.integers(0, 2 ** 20))
+def test_fused_decode_property_heavy(b, kv, g, d, s, block_s, dx, r, n,
+                                     kind, dtype, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    h = kv * g
+    q = jax.random.normal(ks[0], (b, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, d), dtype)
+    x, a, bw = _lora_bank(jax.random.fold_in(key, 1), b, dx, r, h * d,
+                          n, dtype)
+    idx = _ids(jax.random.fold_in(key, 2), kind, b, n)
+    length = jax.random.randint(ks[3], (b,), 1, s + 1).astype(jnp.int32)
+    got = flash_decode_lora(q, k, v, length, x, a, bw, idx, 1.0,
+                            block_s=block_s, interpret=True)
+    want = ref.fused_decode_ref(q, k, v, length, x, a, bw, idx, 1.0)
+    _assert_close(got, want, dtype)

@@ -1,0 +1,167 @@
+"""Measured step-time hook: equivalence pin + opt-in behaviour.
+
+The ``measured_step_times`` hook on the twins and the placement sweep is
+strictly opt-in.  This suite pins the contract:
+
+* ``measured_step_times=None`` (and plain construction) is BITWISE
+  identical to the pre-hook twins on every EXACT_FIELDS metric — the
+  hook may not perturb existing results by a single ulp;
+* attaching a ``MeasuredStepTimes`` actually changes the simulation (the
+  surface is used, not dropped on the floor);
+* with the hook on, the legacy ``DigitalTwin`` and the struct-of-arrays
+  ``FastTwin`` still agree exactly (the equivalence contract survives);
+* ``fit_measured_step_times`` recovers planted coefficients from clean
+  rows;
+* ``find_optimal_placement`` threads the hook through to the twin.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (DigitalTwin, FastTwin, MeasuredStepTimes,
+                        WorkloadSpec, find_optimal_placement,
+                        fit_measured_step_times, make_adapter_pool)
+from repro.core.estimators import FittedEstimators
+
+EXACT_FIELDS = ("throughput", "ideal_throughput", "duration", "n_finished",
+                "n_preemptions", "n_loads", "max_kv_used", "ttft",
+                "ttft_p50", "ttft_p99", "n_starved_requests",
+                "starved_per_adapter")
+
+
+def mk_est() -> FittedEstimators:
+    return FittedEstimators(
+        sched=np.array([4e-4, 8e-6, 4e-6, 2.5e-5]),
+        model=np.array([2.4e-2, 2.2e-4, 6.5e-6]),
+        adapters=np.array([1.06, 0.004]),
+        load=np.array([8e-3, 1.1e-3]),
+        load_disk_mult=1.7,
+        memmax=np.array([120000.0, -60.0]))
+
+
+def mk_measured() -> MeasuredStepTimes:
+    # kernel-ish magnitudes, deliberately NOT equal to mk_est()'s analytic
+    # fit so attaching it visibly changes simulation results
+    return MeasuredStepTimes(
+        decode=np.array([1.8e-2, 1.5e-4, 4e-8, 9e-6]),
+        prefill_per_token=5e-6,
+        adapters=np.array([1.03, 0.006]))
+
+
+def mk_spec(seed: int = 3) -> WorkloadSpec:
+    pool = make_adapter_pool(24, [8, 16, 32], [0.15])
+    return WorkloadSpec(adapters=pool, dataset="medium", horizon=80.0,
+                        seed=seed)
+
+
+def assert_same(a, b):
+    for f in EXACT_FIELDS:
+        assert getattr(a, f) == getattr(b, f), \
+            f"{f}: {getattr(a, f)} != {getattr(b, f)}"
+
+
+# --------------------------------------------------------------------- #
+# the None pin: hook absent == hook never existed, bitwise
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("twin_cls", [DigitalTwin, FastTwin])
+def test_measured_none_is_bitwise_noop(twin_cls):
+    est, spec = mk_est(), mk_spec()
+    plain = twin_cls(est).simulate(spec, slots=8).metrics
+    hooked = twin_cls(est, measured_step_times=None) \
+        .simulate(spec, slots=8).metrics
+    assert_same(plain, hooked)
+    assert plain.itl == hooked.itl          # bitwise, not approx
+
+
+def test_with_measured_none_roundtrip_detaches():
+    est = mk_est()
+    attached = est.with_measured(mk_measured())
+    assert attached.measured is not None
+    assert est.measured is None             # original untouched
+    detached = attached.with_measured(None)
+    assert detached.measured is None
+    assert detached.lat_model(8, 0) == est.lat_model(8, 0)
+
+
+# --------------------------------------------------------------------- #
+# opt-in actually changes behaviour, and the twins still agree
+# --------------------------------------------------------------------- #
+
+def test_measured_surface_is_used():
+    est, spec = mk_est(), mk_spec()
+    ms = mk_measured()
+    base = FastTwin(est).simulate(spec, slots=8).metrics
+    hooked = FastTwin(est, measured_step_times=ms) \
+        .simulate(spec, slots=8).metrics
+    assert hooked.duration != base.duration
+    # the estimator methods themselves must reflect the surface
+    attached = est.with_measured(ms)
+    assert attached.lat_model(8, 0) == ms.lat_model(8, 0)
+    assert attached.lat_adapters(4) == ms.lat_adapters(4)
+    assert attached.lat_adapters(0) == 1.0
+
+
+def test_twin_equivalence_with_measured_on():
+    est, spec = mk_est(), mk_spec(seed=11)
+    ms = mk_measured()
+    legacy = DigitalTwin(est, measured_step_times=ms) \
+        .simulate(spec, slots=6).metrics
+    fast = FastTwin(est, measured_step_times=ms) \
+        .simulate(spec, slots=6).metrics
+    assert legacy.n_finished > 0
+    assert_same(legacy, fast)
+    assert fast.itl == pytest.approx(legacy.itl, rel=1e-9, abs=1e-12)
+
+
+# --------------------------------------------------------------------- #
+# fitting
+# --------------------------------------------------------------------- #
+
+def test_fit_recovers_planted_coefficients():
+    true = MeasuredStepTimes(decode=np.array([2e-2, 1e-4, 5e-8, 1e-5]),
+                             prefill_per_token=4e-6,
+                             adapters=np.array([1.02, 0.005]))
+    rows = []
+    for b in (1, 2, 4, 8, 16):
+        for s in (128, 512, 2048):
+            for r in (8, 16, 32):
+                rows.append(dict(kind="decode", batch=b, seq=s, rank=r,
+                                 t=float(true.decode
+                                         @ [1.0, b, b * s, b * r])))
+    for tok in (128, 512, 2048):
+        rows.append(dict(kind="prefill", tokens=tok,
+                         t=1e-4 + true.prefill_per_token * tok))
+    for a in (1, 2, 4, 8):
+        rows.append(dict(kind="adapters", a_unique=a,
+                         mult=float(true.adapters @ [1.0, a])))
+    fit = fit_measured_step_times(rows)
+    np.testing.assert_allclose(fit.decode, true.decode, rtol=1e-6)
+    assert fit.prefill_per_token == pytest.approx(true.prefill_per_token,
+                                                 rel=1e-6)
+    np.testing.assert_allclose(fit.adapters, true.adapters, rtol=1e-6)
+
+
+def test_fit_requires_decode_rows():
+    with pytest.raises(ValueError, match="decode"):
+        fit_measured_step_times([dict(kind="prefill", tokens=8, t=1e-4)])
+
+
+# --------------------------------------------------------------------- #
+# placement threading
+# --------------------------------------------------------------------- #
+
+def test_placement_threads_measured_hook():
+    est = mk_est()
+    pool = make_adapter_pool(12, [8, 16], [0.2])
+    kw = dict(dataset="medium", horizon=40.0, seed=2, n_grid=[6, 12],
+              early_stop=0)
+    base = find_optimal_placement(est, pool, **kw)
+    hooked_none = find_optimal_placement(est, pool,
+                                         measured_step_times=None, **kw)
+    # None threads through as a bitwise no-op on the whole sweep
+    assert [(-p.n_adapters, p.slots, p.throughput) for p in base.curve] == \
+        [(-p.n_adapters, p.slots, p.throughput) for p in hooked_none.curve]
+    hooked = find_optimal_placement(est, pool,
+                                    measured_step_times=mk_measured(), **kw)
+    assert any(a.throughput != b.throughput
+               for a, b in zip(base.curve, hooked.curve))
