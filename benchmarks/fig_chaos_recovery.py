@@ -1,0 +1,172 @@
+"""Chaos recovery: seeded fault storm, request reliability, twin replay.
+
+The robustness figure (ours; no paper counterpart — the paper's Digital
+Twin is only validated on healthy runs): a 3-replica fleet serves a
+skewed workload while a seeded ``FaultPlan`` storm plays out — one
+replica crash *with* recovery (snapshot/restore + Fig. 4 reload costs),
+one adapter-load fault window on the hottest adapter, one straggler
+window, one client disconnect.  Three acceptance claims are asserted:
+
+* **zero lost requests** — with the reliability layer armed, every
+  request in the stream reaches exactly one terminal state (finished,
+  explicitly failed after the retry budget, or client-disconnected);
+  nothing hangs and nothing double-counts;
+* **retries earn their keep** — the retry arm finishes strictly more
+  requests than the identical run with the retry budget set to zero;
+* **the twin replays the storm bitwise** — the object-mode cluster
+  (``ServingEngine`` replicas) and the Digital Twin (``FastEngine``
+  replicas) agree exactly on finished/starved counts *and* on every
+  fault counter, which is what makes faulted runs labelable
+  training data.
+
+Results land in ``BENCH_chaos_recovery.json`` at the repo root; the
+committed copy is refreshed per PR so the reliability trajectory lives
+in its git history.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import CsvOut, fitted_estimators, is_smoke
+from repro.core import (ClusterDigitalTwin, WorkloadSpec, generate_requests,
+                        make_adapter_pool)
+from repro.serving import (AdapterLoadFault, ClientDisconnect, ClusterRouter,
+                           FaultPlan, ReliabilityPolicy, ReplicaCrash,
+                           StragglerWindow)
+
+EXACT_FIELDS = ("n_finished", "n_starved_requests", "n_timeouts",
+                "n_retries", "n_failed_requests", "n_load_faults",
+                "n_loads", "n_preemptions", "throughput", "duration")
+
+
+def config(smoke: bool) -> dict:
+    if smoke:
+        return dict(n_replicas=3, n_adapters=12, slots=4, horizon=40.0,
+                    epoch=5.0, seed=3, timeout_s=8.0, max_retries=3)
+    return dict(n_replicas=3, n_adapters=16, slots=4, horizon=60.0,
+                epoch=5.0, seed=3, timeout_s=8.0, max_retries=3)
+
+
+def storm(cfg: dict, pool, n_requests: int) -> FaultPlan:
+    """The seeded storm: every fault class the layer supports, timed so
+    the fleet has warm state to break (mid-horizon)."""
+    h = cfg["horizon"]
+    hot = max(pool, key=lambda a: a.rate).uid
+    return FaultPlan(events=(
+        ReplicaCrash(replica=1, at=0.3 * h, recover_at=0.55 * h),
+        AdapterLoadFault(replica=0, adapter=hot, at=0.2 * h,
+                         until=0.6 * h),
+        StragglerWindow(replica=2, at=0.35 * h, until=0.65 * h,
+                        factor=5.0),
+        ClientDisconnect(at=0.25 * h, request_index=min(40,
+                                                        n_requests - 1)),
+    ), seed=cfg["seed"])
+
+
+def run_arm(est, cfg: dict, reqs, spec, plan, max_retries: int,
+            fast: bool):
+    twin = ClusterDigitalTwin(est, mode="full", fast=fast)
+    router = ClusterRouter(
+        twin.specs_from_slots([cfg["slots"]] * cfg["n_replicas"],
+                              mean_rank=12.0),
+        policy="affinity")
+    rel = ReliabilityPolicy(timeout_s=cfg["timeout_s"],
+                            max_retries=max_retries)
+    return twin.simulate_online(spec, router, requests=reqs,
+                                epoch=cfg["epoch"], rebalance=True,
+                                straggler_factor=3.0,
+                                fault_plan=plan, reliability=rel)
+
+
+def main(out: CsvOut) -> None:
+    est = fitted_estimators()
+    cfg = config(is_smoke())
+    pool = make_adapter_pool(cfg["n_adapters"], [8, 16], [0.3, 0.1])
+    spec = WorkloadSpec(adapters=pool, dataset="medium",
+                        horizon=cfg["horizon"], seed=cfg["seed"])
+    reqs = generate_requests(spec)
+    plan = storm(cfg, pool, len(reqs))
+
+    retry = run_arm(est, cfg, reqs, spec, plan, cfg["max_retries"],
+                    fast=True)
+    no_retry = run_arm(est, cfg, reqs, spec, plan, 0, fast=True)
+    cluster = run_arm(est, cfg, reqs, spec, plan, cfg["max_retries"],
+                      fast=False)
+
+    for tag, res in (("retry", retry), ("no_retry", no_retry)):
+        m, f = res.metrics, res.online.faults
+        out.row(tag, 1.0,
+                f"finished={m.n_finished};failed={m.n_failed_requests};"
+                f"timeouts={f.n_timeouts};retries={f.n_retries};"
+                f"crashes={f.n_crashes};recoveries={f.n_recoveries};"
+                f"disconnects={f.n_disconnects};"
+                f"breaker_opens={f.n_breaker_opens}")
+
+    # --- the storm actually contained every fault class ----------------- #
+    f = retry.online.faults
+    if f.n_crashes < 1 or f.n_recoveries < 1:
+        raise RuntimeError(f"storm lost its crash+recovery: {f.as_dict()}")
+    if f.n_adapter_faults < 1:
+        raise RuntimeError(f"storm lost its adapter-load fault: "
+                           f"{f.as_dict()}")
+    if not retry.online.straggler_epochs:
+        raise RuntimeError("storm lost its straggler window: no epoch "
+                           "flagged a straggling replica")
+    if f.n_disconnects < 1:
+        raise RuntimeError(f"storm lost its client disconnect: "
+                           f"{f.as_dict()}")
+
+    # --- zero lost requests on both arms --------------------------------- #
+    for tag, res in (("retry", retry), ("no_retry", no_retry)):
+        m, ff = res.metrics, res.online.faults
+        terminal = m.n_finished + m.n_failed_requests + ff.n_disconnects
+        if terminal != len(reqs):
+            raise RuntimeError(
+                f"{tag}: lost requests — {terminal} terminal of "
+                f"{len(reqs)} submitted "
+                f"(finished={m.n_finished}, failed={m.n_failed_requests},"
+                f" disconnected={ff.n_disconnects})")
+
+    # --- retries earn their keep ----------------------------------------- #
+    if retry.metrics.n_finished <= no_retry.metrics.n_finished:
+        raise RuntimeError(
+            "retry arm finished no more than the no-retry arm: "
+            f"{retry.metrics.n_finished} <= "
+            f"{no_retry.metrics.n_finished}")
+
+    # --- twin replays the cluster bitwise -------------------------------- #
+    for field in EXACT_FIELDS:
+        a = getattr(cluster.metrics, field)
+        b = getattr(retry.metrics, field)
+        if a != b:
+            raise RuntimeError(
+                f"twin diverged from the cluster on {field}: {a} != {b}")
+    if cluster.online.faults.as_dict() != retry.online.faults.as_dict():
+        raise RuntimeError(
+            "twin fault counters diverged from the cluster: "
+            f"{retry.online.faults.as_dict()} != "
+            f"{cluster.online.faults.as_dict()}")
+    out.row("twin_replay", 1.0, "bitwise=ok")
+
+    payload = {
+        "smoke": is_smoke(),
+        "config": {k: cfg[k] for k in ("n_replicas", "n_adapters", "slots",
+                                       "horizon", "timeout_s",
+                                       "max_retries")},
+        "n_requests": len(reqs),
+        "storm": plan.summary(),
+        "retry": {**{k: getattr(retry.metrics, k) for k in
+                     ("n_finished", "n_failed_requests", "n_timeouts",
+                      "n_retries")},
+                  **retry.online.faults.as_dict()},
+        "no_retry": {"n_finished": no_retry.metrics.n_finished,
+                     "n_failed_requests":
+                         no_retry.metrics.n_failed_requests},
+        "retry_advantage": retry.metrics.n_finished
+        - no_retry.metrics.n_finished,
+        "twin_bitwise_match": True,
+    }
+    path = Path(__file__).resolve().parent.parent \
+        / "BENCH_chaos_recovery.json"
+    path.write_text(json.dumps(payload, indent=2) + "\n")

@@ -28,6 +28,7 @@ BENCHES = (
     "fig6_slots_timeline",
     "fig7_slots_and_dynamic",
     "fig9_scale_384",
+    "fig_chaos_recovery",
     "fig_cluster_scaling",
     "fig_gateway_openloop",
     "fig_rebalancing",
@@ -43,6 +44,7 @@ BENCHES = (
 SMOKE_BENCHES = (
     "fig2_loaded_adapters",
     "fig4_loading",
+    "fig_chaos_recovery",
     "fig_cluster_scaling",
     "fig_gateway_openloop",
     "fig_rebalancing",

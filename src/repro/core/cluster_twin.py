@@ -135,7 +135,10 @@ class ClusterDigitalTwin:
                         straggler_factor: float = 0.0,
                         horizon: Optional[float] = None,
                         drain: bool = True,
-                        initial_placement: Optional[Dict[int, int]] = None
+                        max_drain_epochs: int = 1000,
+                        initial_placement: Optional[Dict[int, int]] = None,
+                        fault_plan=None,
+                        reliability=None
                         ) -> ClusterDTResult:
         """Epoch-driven fleet simulation: the production ``run_online``
         loop over estimator-backed engines.
@@ -144,6 +147,11 @@ class ClusterDigitalTwin:
         honoured in *both* DT modes: online runs exist to study
         non-stationary streams (drift, failures), which a mean-mode
         resample would silently flatten back to stationary Poisson.
+
+        ``fault_plan`` / ``reliability`` pass straight through to
+        ``run_online``: the twin replays the identical fault schedule
+        bitwise (same epoch-granular timeline, same engine hooks), so a
+        faulted run is as labelable as a healthy one.
         """
         t0 = time.perf_counter()
         ranks = {a.uid: a.rank for a in spec.adapters}
@@ -152,7 +160,9 @@ class ClusterDigitalTwin:
         else:
             requests = [dataclasses.replace(
                 r, generated=0, admitted_at=None, first_token_at=None,
-                finished_at=None, token_times=[], n_preemptions=0)
+                finished_at=None, token_times=[], n_preemptions=0,
+                n_retries=0, n_timeouts=0, failed_at=None, retry_at=None,
+                disconnected_at=None)
                 for r in requests]
         # expected per-replica share of the pool for the estimator's G/N
         # term (the online partition is not known up front)
@@ -165,11 +175,19 @@ class ClusterDigitalTwin:
             engine_factory=FastEngine if self.fast else None)
         if rebalancer is None and rebalance:
             rebalancer = self.rebalancer(spec, router)
+        if reliability is not None and reliability.load_cost_fn is None:
+            # honesty default: recovery reloads pay the fitted Fig. 4 cost
+            reliability = dataclasses.replace(
+                reliability,
+                load_cost_fn=lambda uid: self.est.lat_load(
+                    ranks.get(uid, 8)))
         report = cluster.run_online(
             requests, horizon=horizon or spec.horizon, epoch=epoch,
             rebalancer=rebalancer, failures=failures,
             straggler_factor=straggler_factor, drain=drain,
-            initial_placement=initial_placement)
+            max_drain_epochs=max_drain_epochs,
+            initial_placement=initial_placement,
+            fault_plan=fault_plan, reliability=reliability)
         return ClusterDTResult(
             metrics=report.metrics,
             router_summary=report.router_summary,

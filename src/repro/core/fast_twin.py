@@ -113,7 +113,8 @@ class _FastAdapterCache:
     idle resident adapter exists iff ``len(pinned) < len(loaded)``.
     """
 
-    __slots__ = ("slots", "loaded", "pinned", "load_count", "evict_count")
+    __slots__ = ("slots", "loaded", "pinned", "load_count", "evict_count",
+                 "failing")
 
     def __init__(self, slots: int):
         self.slots = slots
@@ -121,12 +122,17 @@ class _FastAdapterCache:
         self.pinned: Dict[int, int] = {}       # adapter uid -> #running reqs
         self.load_count = 0
         self.evict_count = 0
+        self.failing: set = set()              # uids whose loads fault-fail
 
     def is_loaded(self, uid: int) -> bool:
         return uid in self.loaded
 
     def can_load(self, uid: int) -> bool:
-        return (uid in self.loaded or len(self.loaded) < self.slots
+        if uid in self.loaded:
+            return True
+        if uid in self.failing:
+            return False
+        return (len(self.loaded) < self.slots
                 or len(self.pinned) < len(self.loaded))
 
     def evict_idle_lru(self) -> Optional[int]:
@@ -280,6 +286,10 @@ class FastEngine:
         self.busy_time = 0.0
         self.n_exec_steps = 0
         self.n_tokens_out = 0
+        # fault-injection state (mirrors ServingEngine)
+        self.slow_factor = 1.0
+        self.n_load_faults = 0
+        self._row_of: Dict[int, int] = {}      # request uid -> latest row
         # struct-of-arrays request table (rows appended per submit)
         self._n_rows = 0
         cap = 256
@@ -387,6 +397,8 @@ class FastEngine:
             self._kv_blocks[i] = 0
         if self._track:
             self._refs.extend(requests)
+            for i, r in enumerate(requests, start=n0):
+                self._row_of[r.uid] = i
         self._n_rows = n1
         new = np.arange(n0, n1, dtype=np.int64)
         merged = np.concatenate([self._pend[self._next:], new])
@@ -541,13 +553,14 @@ class FastEngine:
             # not per skipped row
             can_new = (len(loaded) < cache.slots
                        or len(pinned) < len(loaded))
+            failing = cache.failing
             for i in candidates:
                 if self._n_run >= max_running:
                     break
                 if just_pre is not None and i in just_pre:
                     continue
                 a = ads[i]
-                if a not in loaded and not can_new:
+                if a not in loaded and (not can_new or a in failing):
                     continue
                 g = int(gen[i])
                 ctx = prompts[i] + g
@@ -702,6 +715,10 @@ class FastEngine:
                 return
             total = (self._times.sched(r_run, n_wait) + load_lat) \
                 + self._times.model(r_run, pf, a_run)
+            # same guarded multiply as ServingEngine.run_until: both
+            # engines scale the identical float by the identical factor
+            if self.slow_factor != 1.0:
+                total *= self.slow_factor
             t += total
             self.busy_time += total
             self.n_exec_steps += 1
@@ -741,6 +758,19 @@ class FastEngine:
         for i in starved_rows:
             a = self._ads[i]
             starved_per_adapter[a] = starved_per_adapter.get(a, 0) + 1
+        # reliability counters live on the tracked Request objects (the
+        # cluster loop mutates them); sum over accounted rows exactly as
+        # the object engine's summarize() does over _accepted
+        n_timeouts = n_retries = n_failed = 0
+        if self._track:
+            for i in range(n):
+                if self._drained[i]:
+                    continue
+                r = self._refs[i]
+                n_timeouts += r.n_timeouts
+                n_retries += r.n_retries
+                if r.failed_at is not None:
+                    n_failed += 1
         return ServingMetrics(
             throughput=out_tokens / duration,
             itl=float(np.mean(itls)) if len(itls) else 0.0,
@@ -755,6 +785,10 @@ class FastEngine:
             ttft_p99=pct["p99"],
             n_starved_requests=int(len(starved_rows)),
             starved_per_adapter=starved_per_adapter,
+            n_timeouts=n_timeouts,
+            n_retries=n_retries,
+            n_failed_requests=n_failed,
+            n_load_faults=self.n_load_faults,
             ttft_samples=[float(t) for t in ttfts],
         )
 
@@ -791,6 +825,9 @@ class FastEngine:
         if self._adapters.is_loaded(uid):
             self._adapters.touch(uid, self.clock)
             return True
+        if uid in self._adapters.failing:
+            self.n_load_faults += 1
+            return False
         if not self._adapters.can_load(uid):
             return False
         self._adapters.load(uid, self.clock)
@@ -799,6 +836,79 @@ class FastEngine:
 
     def evict_adapter(self, uid: int) -> bool:
         return self._adapters.evict(uid)
+
+    def stall_until(self, t: float) -> None:
+        """Transient executor fault: clock jump, no service (mirrors
+        ``ServingEngine.stall_until``)."""
+        self.clock = max(self.clock, t)
+
+    def snapshot(self) -> dict:
+        return {"clock": self.clock,
+                "adapters": sorted(self._adapters.loaded)}
+
+    def restore(self, snap: dict, now: float, load_cost_fn=None
+                ) -> List[int]:
+        """Crash recovery (mirrors ``ServingEngine.restore``): un-halt,
+        clock to ``now``, reload the snapshot's adapter set at Fig. 4
+        cost, skipping (and counting) fault-failing uids."""
+        self.halted = False
+        self.clock = max(now, self.clock)
+        self._adapters.loaded.clear()
+        self._adapters.pinned.clear()
+        reloaded: List[int] = []
+        for uid in snap.get("adapters", []):
+            if uid in self._adapters.failing:
+                self.n_load_faults += 1
+                continue
+            self._adapters.load(uid, self.clock)
+            if load_cost_fn is not None:
+                self.clock += load_cost_fn(uid)
+            reloaded.append(uid)
+        return reloaded
+
+    def cancel(self, uid: int, forget: bool = False) -> Optional[Request]:
+        """Pull one request out (mirrors ``ServingEngine.cancel``).
+        Needs request tracking — cancellation hands the object back to
+        the cluster/gateway reliability layer."""
+        if not self._track:
+            raise RuntimeError("cancel() needs track_requests=True")
+        row = self._row_of.get(uid)
+        if row is None or self._drained[row] \
+                or self._finished[row] == self._finished[row]:  # finished
+            return None
+        if row in self._rpos:
+            self._remove_running(row)
+            self._kv_free(row)
+            self._adapters.unpin(self._ads[row])
+            m = self._n_run
+            if m:
+                run = self._run[:m]
+                self._rem_min = int(
+                    (self._out_len[run] - self._generated[run]).min())
+            else:
+                self._rem_min = math.inf
+        elif row in self.waiting:
+            self.waiting = deque(w for w in self.waiting if w != row)
+            a = self._ads[row]
+            c = self._wait_ads.get(a, 0) - 1
+            if c > 0:
+                self._wait_ads[a] = c
+            else:
+                self._wait_ads.pop(a, None)
+        else:
+            keep = self._pend[self._next:]
+            mask = keep != row
+            if mask.all():
+                return None                     # already cancelled earlier
+            keep = keep[mask]
+            self._pend = keep
+            self._pend_arr = self._arrival[keep]
+            self._pend_list = keep.tolist()
+            self._next = 0
+        if forget:
+            self._drained[row] = True
+        self._sync_rows([row])
+        return self._refs[row]
 
     # ------------------------------------------------------------------ #
     def run(self, requests: List[Request], horizon: Optional[float] = None,

@@ -32,8 +32,9 @@ from ..core.workload import (WorkloadSpec, generate_drifting_requests,
                              rotating_hot_phases)
 from ..serving import (ClusterMetrics, ClusterRouter, FailureEvent,
                        HardwareProfile, PredictiveRebalancer,
-                       RebalancePolicy, ServingCluster, SyntheticExecutor,
-                       make_replica_specs, plan_initial_placement)
+                       RebalancePolicy, ReliabilityPolicy, ServingCluster,
+                       SyntheticExecutor, make_replica_specs,
+                       parse_chaos_spec, plan_initial_placement)
 from ..serving.cluster import POLICIES
 from ..serving.policy import SCHED_POLICIES
 
@@ -148,7 +149,8 @@ def run_once(args, policy: str, verbose: bool = True) -> ClusterMetrics:
     cluster = ServingCluster(router, executors)
 
     online = args.online or args.rebalance or args.kill \
-        or args.drift > 0 or args.replicate or args.plan_initial
+        or args.drift > 0 or args.replicate or args.plan_initial \
+        or args.chaos or args.request_timeout > 0
     if online:
         rebalancer = None
         model = None
@@ -178,13 +180,38 @@ def run_once(args, policy: str, verbose: bool = True) -> ClusterMetrics:
             initial = plan_initial_placement(
                 model, plan_pool, spec.length_stats(), args.replicas,
                 sched_policy=args.sched_policy)
+        fault_plan = None
+        if args.chaos:
+            try:
+                fault_plan = parse_chaos_spec(
+                    args.chaos, args.replicas, args.horizon,
+                    seed=args.seed, adapters=[a.uid for a in pool],
+                    n_requests=len(reqs))
+            except ValueError as exc:
+                raise SystemExit(str(exc))
+        reliability = None
+        if args.request_timeout > 0:
+            reliability = ReliabilityPolicy(
+                timeout_s=args.request_timeout,
+                max_retries=args.max_retries,
+                load_cost_fn=lambda uid: load_cost)
         report = cluster.run_online(
             reqs, horizon=args.horizon, epoch=args.epoch,
             rebalancer=rebalancer,
             failures=_failures(args.kill, args.replicas),
             straggler_factor=args.straggler_factor,
-            initial_placement=initial)
+            initial_placement=initial,
+            fault_plan=fault_plan, reliability=reliability)
         metrics = report.metrics
+        if verbose and (fault_plan is not None or reliability is not None):
+            f = report.faults
+            print(f"  faults: crashes={f.n_crashes} "
+                  f"recoveries={f.n_recoveries} "
+                  f"load_faults={f.n_load_faults} "
+                  f"timeouts={f.n_timeouts} retries={f.n_retries} "
+                  f"failed={f.n_failed_requests} "
+                  f"disconnects={f.n_disconnects} "
+                  f"breaker_opens={f.n_breaker_opens}")
         if verbose:
             # report.migrations is the full executed-plan log; count the
             # actual migrations separately from (un)replications
@@ -268,6 +295,21 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--straggler-factor", type=float, default=0.0,
                     help="flag replicas slower than FACTOR x fleet "
                          "median step time (0 = off)")
+    # fault injection / reliability --------------------------------------- #
+    ap.add_argument("--chaos", default="", metavar="SPEC",
+                    help="seeded fault storm: comma list of kind[:count] "
+                         "over crash, loadfail, straggler, stall, "
+                         "disconnect — e.g. 'crash:1,loadfail:2' "
+                         "(deterministic per --seed; implies --online)")
+    ap.add_argument("--request-timeout", type=float, default=0.0,
+                    help="per-request deadline in virtual seconds; "
+                         "expired requests are retried with exponential "
+                         "backoff on a surviving replica (0 = off; "
+                         "implies --online)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="retry budget per request once --request-timeout "
+                         "is armed; exhausted requests are failed and "
+                         "counted")
     return ap
 
 

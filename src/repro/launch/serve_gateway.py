@@ -24,8 +24,9 @@ import asyncio
 from ..core.workload import (WorkloadSpec, load_trace, make_adapter_pool,
                              open_loop_arrivals, replay_trace, save_trace)
 from ..serving import (AsyncGateway, EngineConfig, GatewayHTTPServer,
-                       HardwareProfile, ServingEngine, SyntheticExecutor,
-                       estimator_admission)
+                       HardwareProfile, ReliabilityPolicy, ServingEngine,
+                       SyntheticExecutor, estimator_admission,
+                       parse_chaos_spec)
 from ..serving.policy import SCHED_POLICIES
 
 
@@ -66,6 +67,20 @@ def build_parser() -> argparse.ArgumentParser:
                          "seconds (0 = driven mode)")
     ap.add_argument("--time-scale", type=float, default=1.0,
                     help="live mode: virtual seconds per wall second")
+    # fault injection / reliability --------------------------------------- #
+    ap.add_argument("--chaos", default="", metavar="SPEC",
+                    help="seeded fault storm: comma list of kind[:count] "
+                         "over crash, loadfail, straggler, stall, "
+                         "disconnect — e.g. 'crash:1,disconnect:2' "
+                         "(deterministic per --seed)")
+    ap.add_argument("--request-timeout", type=float, default=0.0,
+                    help="per-request deadline in virtual seconds; "
+                         "expired requests are retried with exponential "
+                         "backoff (0 = off)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="retry budget per request once --request-timeout "
+                         "is armed; exhausted requests are failed and "
+                         "counted")
     return ap
 
 
@@ -89,8 +104,27 @@ def build_gateway(args) -> AsyncGateway:
         stats = WorkloadSpec(adapters=pool,
                              dataset=args.dataset).length_stats()
         admission = estimator_admission(est, stats, args.slo_budget)
+    fault_plan = None
+    if args.chaos:
+        # the arrival stream is lazy, so bound disconnect indices by the
+        # expected request count of the Poisson process
+        n_expected = max(int(args.adapters * args.rate * args.duration), 1)
+        try:
+            fault_plan = parse_chaos_spec(
+                args.chaos, 1, args.duration, seed=args.seed,
+                adapters=list(range(args.adapters)),
+                n_requests=n_expected)
+        except ValueError as exc:
+            raise SystemExit(str(exc))
+    reliability = None
+    if args.request_timeout > 0:
+        reliability = ReliabilityPolicy(
+            timeout_s=args.request_timeout, max_retries=args.max_retries,
+            load_cost_fn=lambda uid: profile.load_cpu_base
+            + profile.load_cpu_per_rank * args.rank)
     return AsyncGateway(engine, admission=admission,
-                        time_scale=args.time_scale)
+                        time_scale=args.time_scale,
+                        fault_plan=fault_plan, reliability=reliability)
 
 
 def _print_report(report) -> None:
@@ -107,6 +141,14 @@ def _print_report(report) -> None:
                        key=lambda kv: -kv[1])[:5]
         print("  rejections by adapter: "
               + ", ".join(f"{a}:{c}" for a, c in worst))
+    if any(s[k] for k in ("n_crashes", "n_recoveries", "n_timeouts",
+                          "n_retries", "n_failed_requests",
+                          "n_client_disconnects")):
+        print(f"  faults: crashes={s['n_crashes']} "
+              f"recoveries={s['n_recoveries']} "
+              f"timeouts={s['n_timeouts']} retries={s['n_retries']} "
+              f"failed={s['n_failed_requests']} "
+              f"disconnects={s['n_client_disconnects']}")
 
 
 async def _run_driven(args, gateway: AsyncGateway):

@@ -14,6 +14,11 @@ from .cluster import (POLICIES, ClusterMetrics, ClusterRouter,  # noqa
                       FailureEvent, OnlineReport, ReplicaSpec,
                       RoutingPolicy, ServingCluster, make_replica_specs,
                       register_policy)
+from .faults import (AdapterLoadFault, CircuitBreaker,  # noqa
+                     ClientDisconnect, ExecutorFault, FaultPlan,
+                     FaultStats, NoAliveReplicasError, ReliabilityPolicy,
+                     ReplicaCrash, StragglerWindow, generate_fault_plan,
+                     parse_chaos_spec)
 from .rebalance import (AdapterLoadTracker, Migration,  # noqa
                         PlanAction, RebalancePolicy, RebalanceReport,
                         Replicate, Unreplicate)

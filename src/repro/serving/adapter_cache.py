@@ -30,6 +30,7 @@ class AdapterSlotCache:
         self.pinned: Dict[int, int] = {}       # adapter uid -> #running reqs
         self.load_count = 0
         self.evict_count = 0
+        self.failing: set = set()              # uids whose loads fault-fail
 
     def is_loaded(self, uid: int) -> bool:
         return uid in self.loaded
@@ -41,6 +42,8 @@ class AdapterSlotCache:
         # per waiting request per step, the engine's hottest path.
         if uid in self.loaded:
             return True
+        if uid in self.failing:
+            return False
         if self.dynamic:
             return self._reserve is None or self._reserve(uid, dry=True) \
                 or len(self.pinned) < len(self.loaded)

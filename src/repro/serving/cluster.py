@@ -44,6 +44,8 @@ import math
 from typing import Dict, List, Optional, Sequence, Tuple, Type, Union
 
 from .engine import EngineConfig, ServingEngine
+from .faults import (CircuitBreaker, FaultPlan, FaultStats,
+                     NoAliveReplicasError, ReliabilityPolicy)
 from .metrics import ServingMetrics, ttft_percentiles
 from .rebalance import Replicate, Unreplicate
 from .request import Request
@@ -165,7 +167,8 @@ class AffinityPolicy(RoutingPolicy):
         # stragglers stay eligible for adapters they already hold (warm
         # routing is mitigation without migration); dead replicas never are
         holders = [i for i in range(r.n_replicas)
-                   if r.alive[i] and req.adapter in r.resident[i]]
+                   if r.alive[i] and not r.breaker_blocked(i)
+                   and req.adapter in r.resident[i]]
         if holders:
             rep = min(holders, key=lambda i: (r.load(i), i))
             floor = r.load(r.least_loaded())
@@ -233,6 +236,11 @@ class ClusterRouter:
         self.alive: List[bool] = [True] * n
         self.straggler: List[bool] = [False] * n
         self.last_heartbeat: List[float] = [0.0] * n
+        # per-replica circuit breakers, next to the straggler flag: a
+        # replica accumulating failures (timeouts, refused adapter
+        # loads) is cut out of routing until its cooldown probe passes
+        self.breakers: List[CircuitBreaker] = [CircuitBreaker()
+                                               for _ in range(n)]
         self._seq = 0
         self.policy.reset()
 
@@ -245,11 +253,15 @@ class ClusterRouter:
 
     def eligible(self) -> List[int]:
         """Replicas new adapters may be routed to: alive and, when at
-        least one non-straggler is alive, not straggling."""
+        least one unimpaired replica is alive, neither straggling nor
+        circuit-broken.  Raises :class:`NoAliveReplicasError` when the
+        fleet has no alive replica at all — callers (gateway, cluster)
+        translate that to a 503."""
         live = self.live_replicas()
         if not live:
-            raise RuntimeError("no alive replicas")
-        fast = [i for i in live if not self.straggler[i]]
+            raise NoAliveReplicasError("no alive replicas")
+        fast = [i for i in live if not self.straggler[i]
+                and not self.breakers[i].blocked]
         return fast or live
 
     def load(self, rep: int) -> float:
@@ -282,11 +294,34 @@ class ClusterRouter:
         for a in orphaned:
             self._drop_home(a, rep)
         if not any(self.alive):
-            raise RuntimeError("all replicas dead")
+            raise NoAliveReplicasError("all replicas dead")
         return orphaned
 
     def mark_straggler(self, rep: int, flag: bool = True) -> None:
         self.straggler[rep] = flag
+
+    # ------------------------------------------------------------------ #
+    # circuit breaker + crash recovery
+    # ------------------------------------------------------------------ #
+    def breaker_blocked(self, rep: int) -> bool:
+        return self.breakers[rep].blocked
+
+    def record_failure(self, rep: int, now: float) -> None:
+        self.breakers[rep].record_failure(now)
+
+    def record_success(self, rep: int) -> None:
+        self.breakers[rep].record_success()
+
+    def revive(self, rep: int, adapters: Sequence[int], now: float) -> None:
+        """Rejoin a recovered replica: alive again, fresh heartbeat,
+        breaker reset, and residency beliefs re-seeded from the adapter
+        set its engine actually restored."""
+        self.alive[rep] = True
+        self.straggler[rep] = False
+        self.last_heartbeat[rep] = max(self.last_heartbeat[rep], now)
+        self.breakers[rep].reset()
+        for a in adapters:
+            self._admit_resident(a, rep)
 
     # ------------------------------------------------------------------ #
     # residency plumbing (shared by routing, migration and replication)
@@ -431,6 +466,11 @@ class ClusterMetrics:
     n_starved_requests: int = 0
     starved_per_adapter: Dict[int, int] = dataclasses.field(
         default_factory=dict)
+    # reliability counters (0 on the healthy path)
+    n_timeouts: int = 0
+    n_retries: int = 0
+    n_failed_requests: int = 0
+    n_load_faults: int = 0
 
     @property
     def starved(self) -> bool:
@@ -494,6 +534,10 @@ class ClusterMetrics:
             ttft_p99=p99,
             n_starved_requests=sum(m.n_starved_requests for m in per),
             starved_per_adapter=starved_per_adapter,
+            n_timeouts=sum(m.n_timeouts for m in per),
+            n_retries=sum(m.n_retries for m in per),
+            n_failed_requests=sum(m.n_failed_requests for m in per),
+            n_load_faults=sum(m.n_load_faults for m in per),
         )
 
 
@@ -522,6 +566,9 @@ class OnlineReport:
     n_rerouted: int
     straggler_epochs: Dict[int, int]           # replica -> #epochs flagged
     router_summary: Dict[str, object]
+    # everything the fault layer did (all-zero when no FaultPlan /
+    # ReliabilityPolicy was attached)
+    faults: FaultStats = dataclasses.field(default_factory=FaultStats)
 
     @property
     def replications(self) -> List[object]:
@@ -580,7 +627,9 @@ class ServingCluster:
                    straggler_factor: float = 0.0,
                    drain: bool = True,
                    max_drain_epochs: int = 1000,
-                   initial_placement: Optional[Dict[int, int]] = None
+                   initial_placement: Optional[Dict[int, int]] = None,
+                   fault_plan: Optional[FaultPlan] = None,
+                   reliability: Optional[ReliabilityPolicy] = None
                    ) -> OnlineReport:
         """Serve the stream in ``epoch``-long windows.
 
@@ -607,6 +656,27 @@ class ServingCluster:
         ``repro.serving.predictive.plan_initial_placement``) instead of
         letting first-touch affinity scatter the pool.  Warm-up happens
         at t=0, before any request, so no Fig. 4 cost is charged.
+
+        ``fault_plan`` injects a deterministic fault schedule
+        (:class:`repro.serving.faults.FaultPlan`): crashes take effect
+        like ``failures`` kills but may *recover* — the engine restores
+        its pre-crash adapter snapshot (Fig. 4 reload costs via
+        ``reliability.load_cost_fn``) and rejoins through the heartbeat
+        path; straggler windows scale the replica's step times;
+        adapter-load faults make a (replica, adapter) pair refuse loads;
+        executor faults stall a replica (no service, no heartbeat);
+        client disconnects cancel an in-flight request.  All fault
+        timing is epoch-granular, which is what lets
+        ``ClusterDigitalTwin.simulate_online`` replay the identical plan
+        bitwise.
+
+        ``reliability`` arms per-request deadlines: a request that has
+        not finished ``timeout_s`` after its (re)submission is cancelled
+        and retried on an eligible replica after exponential backoff, up
+        to ``max_retries`` times, then explicitly failed (``failed_at``
+        set — never silently dropped).  Replicas causing timeouts or
+        refusing adapter loads accumulate circuit-breaker failures and
+        are cut out of routing while their breaker is open.
         """
         if epoch <= 0:
             raise ValueError(f"epoch must be positive, got {epoch}")
@@ -633,19 +703,87 @@ class ServingCluster:
         snap: List[Tuple[float, int]] = [(0.0, 0) for _ in self.engines]
         tok_snap: List[int] = [0] * len(self.engines)
 
+        # --- fault-injection / reliability setup (all inert when no
+        # plan/policy is attached — the healthy path stays byte-identical)
+        stats = report.faults
+        injecting = fault_plan is not None
+        rel = reliability
+        rel_enabled = rel is not None and rel.enabled
+        if rel is not None:
+            for b in router.breakers:
+                b.threshold = max(int(rel.breaker_threshold), 1)
+                b.cooldown_s = rel.breaker_cooldown_s
+        load_cost_fn = rel.load_cost_fn if rel is not None else None
+        straggler_evs = fault_plan.straggler_windows if injecting else []
+        adapter_evs = fault_plan.adapter_faults if injecting else []
+        exec_evs = fault_plan.executor_faults if injecting else []
+        disconnects = list(fault_plan.disconnects) if injecting else []
+        pending_recover = []
+        if injecting:
+            for c in fault_plan.crashes:
+                killed_at[c.replica] = min(
+                    killed_at.get(c.replica, math.inf), c.at)
+                if c.recover_at is not None:
+                    pending_recover.append(c)
+            pending_recover.sort(key=lambda c: c.recover_at)
+        # last known-good engine checkpoints (crash recovery source)
+        ckpt = [eng.snapshot() for eng in self.engines] if injecting \
+            else None
+        lf_snap = [0] * len(self.engines)
+        crash_seen: set = set()
+        ev_seen: set = set()
+        retry_q: List[Request] = []
+
         t = 0.0
         extra = 0
         while t < horizon or (drain and extra < max_drain_epochs
                               and any(r.finished_at is None
+                                      and r.failed_at is None
+                                      and r.disconnected_at is None
                                       for r in stream)):
             if t >= horizon:
                 extra += 1
             t1 = min(t + epoch, horizon) if t < horizon else t + epoch
             report.n_epochs += 1
 
+            # (0) window-start fault activation: straggler slow factors,
+            # adapter-fault failing sets, executor stalls, breaker ticks
+            stalled: set = set()
+            if injecting:
+                for i, eng in enumerate(self.engines):
+                    f = 1.0
+                    for ev in straggler_evs:
+                        if ev.replica == i and ev.at <= t < ev.until:
+                            f = ev.factor
+                    eng.slow_factor = f
+                    fs = {ev.adapter for ev in adapter_evs
+                          if ev.replica == i and ev.at <= t < ev.until}
+                    eng.adapters.failing = fs
+                for ev in adapter_evs:
+                    if ev.at <= t < ev.until and ev not in ev_seen:
+                        ev_seen.add(ev)
+                        stats.n_adapter_faults += 1
+                for ev in exec_evs:
+                    if ev.at < t1 and ev.at + ev.duration > t:
+                        stalled.add(ev.replica)
+                        if ev not in ev_seen:
+                            ev_seen.add(ev)
+                            stats.n_executor_faults += 1
+            if rel is not None:
+                for b in router.breakers:
+                    b.tick(t)
+            failed_reps: set = set()
+
             # (1) route this window's arrivals (batched per engine: one
-            # submit-sort per replica per window, not per request)
+            # submit-sort per replica per window, not per request), plus
+            # any retried requests whose backoff expires this window
             window: List[List[Request]] = [[] for _ in self.engines]
+            if retry_q:
+                due = [r for r in retry_q if r.retry_at <= t1]
+                if due:
+                    retry_q = [r for r in retry_q if r.retry_at > t1]
+                    for req in due:
+                        window[router.route(req)].append(req)
             while idx < len(stream) and stream[idx].arrival < t1:
                 req = stream[idx]
                 window[router.route(req)].append(req)
@@ -658,11 +796,21 @@ class ServingCluster:
                 if not router.alive[i]:
                     continue
                 kill = killed_at.get(i, math.inf)
+                if kill <= t1 and i not in crash_seen:
+                    crash_seen.add(i)
+                    stats.n_crashes += 1
                 if kill <= t:
                     continue                      # silently dead already
+                if i in stalled:
+                    # transient executor fault: the clock jumps, nothing
+                    # is served and no heartbeat goes out this window
+                    eng.stall_until(min(t1, kill))
+                    continue
                 eng.run_until(min(t1, kill), strict=True)
                 if kill > t1:
                     router.heartbeat(i, t1)
+                    if injecting:
+                        ckpt[i] = eng.snapshot()
 
             # (3) failure detection -> drain + re-route on survivors
             fleet_down = False
@@ -679,6 +827,7 @@ class ServingCluster:
                     break
                 router.mark_dead(i)
                 report.failures_detected[i] = t1
+                failed_reps.add(i)
                 orphans = self.engines[i].drain()
                 rerouted: List[List[Request]] = [[] for _ in self.engines]
                 for req in sorted(orphans, key=lambda r: r.arrival):
@@ -694,6 +843,102 @@ class ServingCluster:
                     eng.submit(batch)
             if fleet_down:
                 break
+
+            # (3b) crash recovery: restore the engine's pre-crash adapter
+            # snapshot (Fig. 4 reload costs) and rejoin via heartbeat
+            while pending_recover and pending_recover[0].recover_at <= t1:
+                c = pending_recover.pop(0)
+                i = c.replica
+                eng = self.engines[i]
+                killed_at.pop(i, None)
+                crash_seen.discard(i)
+                if not router.alive[i]:
+                    # already detected dead: orphans were re-routed at
+                    # detection time, so restore + revive is enough
+                    reloaded = eng.restore(ckpt[i], t1, load_cost_fn)
+                    router.revive(i, reloaded, t1)
+                else:
+                    # recovered before the detector noticed: in-flight
+                    # state is lost all the same — drain, restore,
+                    # re-route the orphans (self included in eligible)
+                    orphans = eng.drain()
+                    reloaded = eng.restore(ckpt[i], t1, load_cost_fn)
+                    router.heartbeat(i, t1)
+                    rerouted = [[] for _ in self.engines]
+                    for req in sorted(orphans, key=lambda r: r.arrival):
+                        req.generated = 0
+                        req.admitted_at = None
+                        req.first_token_at = None
+                        req.finished_at = None
+                        req.token_times = []
+                        req.n_preemptions += 1
+                        rerouted[router.route(req)].append(req)
+                        report.n_rerouted += 1
+                    for e, batch in zip(self.engines, rerouted):
+                        e.submit(batch)
+                stats.n_recoveries += 1
+
+            # (3c) per-request deadlines: cancel + retry with backoff on
+            # an eligible replica, or explicitly fail when retries are
+            # spent (the request is never silently dropped)
+            if rel_enabled:
+                in_backoff = {r.uid for r in retry_q}
+                for r in stream[:idx]:
+                    if r.finished_at is not None or r.failed_at is not None \
+                            or r.disconnected_at is not None \
+                            or r.uid in in_backoff:
+                        continue
+                    started = r.retry_at if r.retry_at is not None \
+                        else r.arrival
+                    if t1 - started <= rel.timeout_s:
+                        continue
+                    rep = router.assignments.get(r.uid)
+                    if rep is None or self.engines[rep].halted:
+                        continue
+                    will_retry = r.n_retries < rel.max_retries
+                    got = self.engines[rep].cancel(r.uid, forget=will_retry)
+                    if got is None:
+                        continue          # raced with a finish this window
+                    r.n_timeouts += 1
+                    stats.n_timeouts += 1
+                    failed_reps.add(rep)
+                    if will_retry:
+                        r.n_retries += 1
+                        stats.n_retries += 1
+                        r.generated = 0
+                        r.admitted_at = None
+                        r.first_token_at = None
+                        r.finished_at = None
+                        r.token_times = []
+                        r.retry_at = t1 + rel.backoff(r.n_retries)
+                        retry_q.append(r)
+                    else:
+                        r.failed_at = t1
+                        stats.n_failed_requests += 1
+
+            # (3d) client disconnects: cancel the engine-side work and
+            # account the request (it stays in its engine's metrics)
+            if disconnects:
+                rest = []
+                for ev in disconnects:
+                    if ev.at > t1:
+                        rest.append(ev)
+                        continue
+                    if not 0 <= ev.request_index < len(stream):
+                        continue
+                    r = stream[ev.request_index]
+                    if r.arrival > t1:
+                        rest.append(ev)   # client not even connected yet
+                        continue
+                    if r.finished_at is None and r.failed_at is None \
+                            and r.disconnected_at is None:
+                        rep = router.assignments.get(r.uid)
+                        if rep is not None:
+                            self.engines[rep].cancel(r.uid, forget=False)
+                        retry_q = [q for q in retry_q if q.uid != r.uid]
+                        r.disconnected_at = t1
+                        stats.n_disconnects += 1
+                disconnects = rest
 
             # (4) straggler flags from observed per-window step times
             if straggler_factor > 0:
@@ -744,9 +989,26 @@ class ServingCluster:
                         router.migrate(act.adapter, act.src, act.dst)
                         rebalancer.commit(act)
                         report.migrations.append(act)
+            # (6) window-end breaker accounting: refused adapter loads
+            # count as replica failures; a clean half-open window closes
+            if injecting:
+                for i, eng in enumerate(self.engines):
+                    d = eng.n_load_faults - lf_snap[i]
+                    if d > 0:
+                        stats.n_load_faults += d
+                        failed_reps.add(i)
+                    lf_snap[i] = eng.n_load_faults
+            if rel is not None:
+                for i in range(router.n_replicas):
+                    b = router.breakers[i]
+                    if i in failed_reps:
+                        b.record_failure(t1)
+                    elif router.alive[i] and b.state == b.HALF_OPEN:
+                        b.record_success()
             tok_snap = [eng.n_tokens_out for eng in self.engines]
             t = t1
 
+        stats.n_breaker_opens = sum(b.n_opens for b in router.breakers)
         report.metrics = ClusterMetrics.aggregate(
             [eng.finalize() for eng in self.engines])
         report.router_summary = router.summary()

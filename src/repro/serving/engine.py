@@ -109,6 +109,10 @@ class ServingEngine:
         self.busy_time = 0.0
         self.n_exec_steps = 0
         self.n_tokens_out = 0
+        # fault-injection state: >1.0 slows every step (straggler
+        # window); n_load_faults counts refused preloads/restores
+        self.slow_factor = 1.0
+        self.n_load_faults = 0
 
     def submit(self, requests: List[Request]) -> None:
         """Enqueue arrivals (any order); may be called between epochs."""
@@ -164,15 +168,20 @@ class ServingEngine:
                 return
             timing: StepTiming = self.executor.step(
                 plan, self.scheduler.n_waiting)
-            t += timing.total
-            self.busy_time += timing.total
+            total = timing.total
+            # guarded multiply: float * 1.0 is an identity but the guard
+            # keeps the healthy path free of any fp op (bitwise pinning)
+            if self.slow_factor != 1.0:
+                total *= self.slow_factor
+            t += total
+            self.busy_time += total
             self.n_exec_steps += 1
             self.n_tokens_out += len(plan.running)
             self._max_kv = max(self._max_kv, self.kv.used_fraction)
             if record_trace:
                 self.trace.append(StepTrace(
                     t, len(plan.running), self.scheduler.n_waiting,
-                    self.kv.used_fraction, timing.total))
+                    self.kv.used_fraction, total))
             # plan.running is already a snapshot; finish() mutates only the
             # scheduler's own list, so no per-step defensive copy is needed
             on_token = self.on_token
@@ -202,7 +211,7 @@ class ServingEngine:
         arrived = [r for r in self._accepted if r.arrival <= duration]
         offered = sum(r.output_len for r in arrived)
         return summarize(self._accepted, duration, offered, self._max_kv,
-                         self.adapters.load_count)
+                         self.adapters.load_count, self.n_load_faults)
 
     # ------------------------------------------------------------------ #
     # fault-tolerance / rebalancing hooks
@@ -239,6 +248,9 @@ class ServingEngine:
         if self.adapters.is_loaded(uid):
             self.adapters.touch(uid, self.clock)
             return True
+        if uid in self.adapters.failing:
+            self.n_load_faults += 1
+            return False
         if not self.adapters.can_load(uid):
             return False
         self.adapters.load(uid, self.clock)
@@ -251,6 +263,70 @@ class ServingEngine:
     def evict_adapter(self, uid: int) -> bool:
         """Drop an adapter's residency (migration source side)."""
         return self.adapters.evict(uid)
+
+    def stall_until(self, t: float) -> None:
+        """Transient executor fault: jump the clock to ``t`` without
+        serving anything (no busy time, no heartbeat-worthy progress)."""
+        self.clock = max(self.clock, t)
+
+    def snapshot(self) -> dict:
+        """Crash-recovery checkpoint: clock + resident adapter set.
+        Request state is NOT captured — orphans re-route via drain()."""
+        return {"clock": self.clock,
+                "adapters": sorted(self.adapters.loaded)}
+
+    def restore(self, snap: dict, now: float,
+                load_cost_fn: Optional[Callable[[int], float]] = None
+                ) -> List[int]:
+        """Rejoin after a crash: un-halt, advance the clock to ``now``
+        and reload the snapshot's adapter set, charging the Fig. 4 cost
+        per adapter via ``load_cost_fn``.  Adapters currently
+        fault-failing are skipped (counted ``n_load_faults``).  Returns
+        the uids actually reloaded."""
+        self.halted = False
+        self.clock = max(now, self.clock)
+        # the crash wiped GPU state: residency/pins restart from the
+        # snapshot without counting phantom evictions
+        self.adapters.loaded.clear()
+        self.adapters.pinned.clear()
+        reloaded: List[int] = []
+        for uid in snap.get("adapters", []):
+            if uid in self.adapters.failing:
+                self.n_load_faults += 1
+                continue
+            self.adapters.load(uid, self.clock)
+            if load_cost_fn is not None:
+                self.clock += load_cost_fn(uid)
+            reloaded.append(uid)
+        return reloaded
+
+    def cancel(self, uid: int, forget: bool = False) -> Optional[Request]:
+        """Pull one request out of the engine (timeout retry / client
+        disconnect).  Frees its KV blocks and adapter pin if running.
+        ``forget`` also removes it from this engine's accounting — used
+        when the request is re-submitted elsewhere (no double-count);
+        a finally-failed request stays accounted here."""
+        found: Optional[Request] = None
+        for i in range(self._next, len(self._pending)):
+            if self._pending[i].uid == uid:
+                found = self._pending.pop(i)
+                break
+        if found is None:
+            for req in self.scheduler.waiting:
+                if req.uid == uid:
+                    found = req
+                    break
+            if found is not None:
+                self.scheduler.waiting = type(self.scheduler.waiting)(
+                    r for r in self.scheduler.waiting if r.uid != uid)
+        if found is None and uid in self.scheduler._pos:
+            found = self.scheduler.running[self.scheduler._pos[uid]]
+            self.scheduler._remove_running(found)
+            self.kv.free(uid)
+            self.adapters.unpin(found.adapter)
+        if found is not None and forget:
+            self._accepted = [r for r in self._accepted if r.uid != uid]
+        return found
 
     # ------------------------------------------------------------------ #
     def run(self, requests: List[Request], horizon: Optional[float] = None,

@@ -1,0 +1,341 @@
+"""Deterministic fault injection + request-reliability primitives.
+
+The paper's Digital Twin claim is only useful if it extends to the
+*unhealthy* system: production adapter-serving fleets are defined by how
+they behave under replica crashes, adapter-load failures, stragglers and
+client disconnects.  This module provides the shared vocabulary:
+
+* typed fault events + a seeded :class:`FaultPlan` schedule that the
+  cluster loop, the gateway and the Digital Twin all consume — the same
+  plan replays bitwise-identically in ``ServingCluster.run_online`` and
+  ``ClusterDigitalTwin.simulate_online`` so faulted runs become
+  labelable training data;
+* :class:`ReliabilityPolicy` — per-request timeouts, bounded
+  retry-with-exponential-backoff, circuit-breaker thresholds and the
+  Fig. 4 reload-cost hook used when a crashed replica restores its
+  adapter cache;
+* :class:`CircuitBreaker` — closed / open / half-open per-replica
+  breaker sitting next to the router's straggler flag;
+* :class:`FaultStats` — the fault/reliability counters surfaced by
+  ``OnlineReport`` and the gateway's ``/v1/metrics``;
+* :class:`NoAliveReplicasError` — the terminal-fleet contract raised by
+  ``ClusterRouter.eligible``/``mark_dead`` and translated to HTTP 503.
+
+Fault timing is epoch-granular by design: an event with time ``at``
+takes effect at the first epoch boundary ``t >= at``, and a window event
+``[at, until)`` applies to epochs whose start falls inside it.  This is
+what makes the cluster and the twin agree bitwise — both advance the
+same virtual-clock epoch loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+
+class NoAliveReplicasError(RuntimeError):
+    """Raised when a routing decision needs an alive replica and the
+    fleet has none.  The gateway and cluster translate this to a 503 —
+    it is a *fleet-state* condition, not a caller bug."""
+
+
+# --------------------------------------------------------------------------- #
+# fault events
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaCrash:
+    """Replica dies at ``at``; with ``recover_at`` set it rejoins via the
+    heartbeat path with its adapter cache restored (Fig. 4 reload costs
+    charged for everything that was resident)."""
+    replica: int
+    at: float
+    recover_at: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class AdapterLoadFault:
+    """Loads of ``adapter`` on ``replica`` fail during ``[at, until)``:
+    preloads/restores refuse (counted ``n_load_faults``), admission falls
+    back to bounded retry on another replica via the breaker path."""
+    replica: int
+    adapter: int
+    at: float
+    until: float
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerWindow:
+    """Replica runs ``factor`` times slower during ``[at, until)`` —
+    the detector's busy-time heuristic should flag it and routing should
+    steer new work away."""
+    replica: int
+    at: float
+    until: float
+    factor: float = 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutorFault:
+    """Transient executor error: the replica stalls (no service, no
+    heartbeat) for ``duration`` seconds starting at ``at``."""
+    replica: int
+    at: float
+    duration: float = 5.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientDisconnect:
+    """The ``request_index``-th request of the arrival stream (in
+    submission order) disconnects at ``at``: the server cancels the
+    engine-side work and accounts it instead of leaking the stream."""
+    at: float
+    request_index: int
+
+
+FaultEvent = object   # union of the five dataclasses above (py3.10-safe)
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """A seeded, replayable schedule of fault events.
+
+    The plan is pure data: injecting the same plan into the cluster, the
+    gateway or the twin yields the same virtual-clock fault timeline.
+    ``seed`` records provenance (the generator seed) for labelling.
+    """
+    events: List[object] = dataclasses.field(default_factory=list)
+    seed: int = 0
+
+    def _of(self, kind) -> list:
+        return sorted((e for e in self.events if isinstance(e, kind)),
+                      key=lambda e: e.at)
+
+    @property
+    def crashes(self) -> List[ReplicaCrash]:
+        return self._of(ReplicaCrash)
+
+    @property
+    def adapter_faults(self) -> List[AdapterLoadFault]:
+        return self._of(AdapterLoadFault)
+
+    @property
+    def straggler_windows(self) -> List[StragglerWindow]:
+        return self._of(StragglerWindow)
+
+    @property
+    def executor_faults(self) -> List[ExecutorFault]:
+        return self._of(ExecutorFault)
+
+    @property
+    def disconnects(self) -> List[ClientDisconnect]:
+        return self._of(ClientDisconnect)
+
+    def summary(self) -> Dict[str, int]:
+        return {"crashes": len(self.crashes),
+                "adapter_faults": len(self.adapter_faults),
+                "straggler_windows": len(self.straggler_windows),
+                "executor_faults": len(self.executor_faults),
+                "disconnects": len(self.disconnects)}
+
+
+# --------------------------------------------------------------------------- #
+# reliability policy + per-replica circuit breaker
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class ReliabilityPolicy:
+    """Request-lifecycle reliability knobs.
+
+    ``timeout_s == 0`` disables timeouts (and with them retries) — the
+    default keeps every pre-existing run bitwise-identical.
+    ``load_cost_fn`` maps an adapter uid to its Fig. 4 reload cost in
+    seconds, charged when a recovering replica restores its cache.
+    """
+    timeout_s: float = 0.0
+    max_retries: int = 2
+    backoff_base: float = 1.0
+    breaker_threshold: int = 3
+    breaker_cooldown_s: float = 10.0
+    load_cost_fn: Optional[Callable[[int], float]] = None
+
+    @property
+    def enabled(self) -> bool:
+        return self.timeout_s > 0.0
+
+    def backoff(self, n_retries: int) -> float:
+        """Exponential backoff before the ``n_retries``-th re-submission
+        (1-indexed): base, 2*base, 4*base, ..."""
+        return self.backoff_base * (2.0 ** max(n_retries - 1, 0))
+
+
+class CircuitBreaker:
+    """Per-replica circuit breaker (closed -> open -> half-open).
+
+    Failures accumulate across windows; ``threshold`` consecutive
+    failures open the breaker, which blocks routing for ``cooldown_s``
+    virtual seconds.  After the cooldown the breaker goes *half-open*: a
+    single probe request is allowed through, and its outcome closes the
+    breaker (success) or re-opens it (failure).  Success only resets the
+    counter from the half-open probe or an explicit ``reset()`` — a
+    replica that heartbeats fine but fails every adapter load must still
+    trip the breaker.
+    """
+
+    CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+
+    def __init__(self, threshold: int = 3, cooldown_s: float = 10.0):
+        self.threshold = max(int(threshold), 1)
+        self.cooldown_s = float(cooldown_s)
+        self.state = self.CLOSED
+        self.failures = 0
+        self.opened_at = 0.0
+        self.n_opens = 0
+
+    def record_failure(self, now: float) -> None:
+        if self.state == self.HALF_OPEN:
+            # the probe failed: straight back to open
+            self.state, self.opened_at = self.OPEN, now
+            self.n_opens += 1
+            return
+        self.failures += 1
+        if self.state == self.CLOSED and self.failures >= self.threshold:
+            self.state, self.opened_at = self.OPEN, now
+            self.n_opens += 1
+
+    def record_success(self) -> None:
+        # only the half-open probe's success closes the breaker; routine
+        # successes while closed do NOT erase accumulated failures
+        if self.state == self.HALF_OPEN:
+            self.reset()
+
+    def tick(self, now: float) -> None:
+        """Advance open -> half-open once the cooldown elapses."""
+        if self.state == self.OPEN and \
+                now - self.opened_at >= self.cooldown_s:
+            self.state = self.HALF_OPEN
+
+    def reset(self) -> None:
+        self.state = self.CLOSED
+        self.failures = 0
+
+    @property
+    def blocked(self) -> bool:
+        """True while routing should avoid this replica entirely."""
+        return self.state == self.OPEN
+
+
+# --------------------------------------------------------------------------- #
+# fault/reliability counters
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class FaultStats:
+    """Counters for everything the fault layer did during a run."""
+    n_timeouts: int = 0            # requests that exceeded the deadline
+    n_retries: int = 0             # re-submissions performed
+    n_failed_requests: int = 0     # requests explicitly failed (retries spent)
+    n_disconnects: int = 0         # client disconnects processed
+    n_adapter_faults: int = 0      # AdapterLoadFault windows activated
+    n_load_faults: int = 0         # refused adapter loads (preload/restore)
+    n_executor_faults: int = 0     # executor stalls injected
+    n_crashes: int = 0             # replica crashes injected
+    n_recoveries: int = 0          # replicas restored + rejoined
+    n_breaker_opens: int = 0       # circuit-breaker open transitions
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+    def add(self, other: "FaultStats") -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+
+
+_CHAOS_KINDS = ("crash", "loadfail", "straggler", "stall", "disconnect")
+
+
+def parse_chaos_spec(spec: str, n_replicas: int, horizon: float,
+                     seed: int = 0,
+                     adapters: Optional[Sequence[int]] = None,
+                     n_requests: int = 0) -> FaultPlan:
+    """Parse a ``--chaos`` spec into a seeded :class:`FaultPlan`.
+
+    Grammar: comma-separated ``kind[:count]`` terms over the kinds
+    ``crash``, ``loadfail``, ``straggler``, ``stall``, ``disconnect``
+    (count defaults to 1), e.g. ``crash:1,loadfail:2,straggler``.
+    Identical (spec, seed, topology) arguments produce an identical
+    plan — the CLI face of :func:`generate_fault_plan`."""
+    counts = {k: 0 for k in _CHAOS_KINDS}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        kind, _, cnt = part.partition(":")
+        if kind not in counts:
+            raise ValueError(
+                f"--chaos: unknown fault kind {kind!r} "
+                f"(choose from {', '.join(_CHAOS_KINDS)})")
+        counts[kind] += int(cnt) if cnt else 1
+    return generate_fault_plan(
+        n_replicas, horizon, seed=seed, adapters=adapters,
+        n_crashes=counts["crash"], n_adapter_faults=counts["loadfail"],
+        n_stragglers=counts["straggler"],
+        n_executor_faults=counts["stall"],
+        n_disconnects=counts["disconnect"], n_requests=n_requests)
+
+
+def generate_fault_plan(n_replicas: int,
+                        horizon: float,
+                        seed: int = 0,
+                        adapters: Optional[Sequence[int]] = None,
+                        n_crashes: int = 1,
+                        n_adapter_faults: int = 1,
+                        n_stragglers: int = 1,
+                        n_executor_faults: int = 0,
+                        n_disconnects: int = 1,
+                        n_requests: int = 0,
+                        recover: bool = True) -> FaultPlan:
+    """Seeded fault-storm generator (the ``--chaos`` backend).
+
+    Event times are drawn uniformly over the middle of the horizon so
+    the system has warm state to break; identical arguments produce an
+    identical plan, which is the determinism contract the twin tests
+    pin.  ``n_requests`` bounds the disconnect target indices (0 skips
+    disconnects when the stream size is unknown).
+    """
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    pool = list(adapters) if adapters else [0]
+    events: List[object] = []
+    for _ in range(n_crashes):
+        rep = int(rng.integers(0, n_replicas))
+        at = float(rng.uniform(0.2, 0.5) * horizon)
+        rec = float(at + rng.uniform(0.15, 0.3) * horizon) if recover \
+            else None
+        events.append(ReplicaCrash(replica=rep, at=at, recover_at=rec))
+    for _ in range(n_adapter_faults):
+        rep = int(rng.integers(0, n_replicas))
+        uid = int(pool[int(rng.integers(0, len(pool)))])
+        at = float(rng.uniform(0.1, 0.4) * horizon)
+        events.append(AdapterLoadFault(
+            replica=rep, adapter=uid, at=at,
+            until=float(at + rng.uniform(0.2, 0.4) * horizon)))
+    for _ in range(n_stragglers):
+        rep = int(rng.integers(0, n_replicas))
+        at = float(rng.uniform(0.2, 0.5) * horizon)
+        events.append(StragglerWindow(
+            replica=rep, at=at,
+            until=float(at + rng.uniform(0.15, 0.3) * horizon),
+            factor=float(rng.uniform(3.0, 6.0))))
+    for _ in range(n_executor_faults):
+        rep = int(rng.integers(0, n_replicas))
+        events.append(ExecutorFault(
+            replica=rep, at=float(rng.uniform(0.2, 0.7) * horizon),
+            duration=float(rng.uniform(2.0, 6.0))))
+    if n_requests > 0:
+        for _ in range(n_disconnects):
+            events.append(ClientDisconnect(
+                at=float(rng.uniform(0.2, 0.8) * horizon),
+                request_index=int(rng.integers(0, n_requests))))
+    return FaultPlan(events=events, seed=seed)

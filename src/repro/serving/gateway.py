@@ -40,9 +40,11 @@ from __future__ import annotations
 import asyncio
 import dataclasses
 import json
+import math
 from typing import Callable, Dict, Iterable, List, Optional, Union
 
 from .engine import ServingEngine
+from .faults import FaultPlan, NoAliveReplicasError, ReliabilityPolicy
 from .metrics import ServingMetrics
 from .request import Request
 
@@ -197,6 +199,14 @@ class GatewayMetrics:
         default_factory=dict)
     n_streamed_tokens: int = 0           # on_token callback firings
     n_streams: int = 0                   # streaming requests opened
+    # reliability counters (0 unless a FaultPlan / ReliabilityPolicy is
+    # armed or a client actually disconnects)
+    n_client_disconnects: int = 0        # cancelled: client went away
+    n_timeouts: int = 0                  # per-request deadline expiries
+    n_retries: int = 0                   # engine re-submissions
+    n_failed_requests: int = 0           # retries spent -> explicit fail
+    n_crashes: int = 0                   # engine crash events injected
+    n_recoveries: int = 0                # engine restore + rejoin events
 
     def reject(self, adapter: int, draining: bool = False) -> None:
         self.n_rejected += 1
@@ -227,6 +237,12 @@ class GatewayReport:
             "n_rejected": g.n_rejected,
             "rejected_per_adapter": dict(g.rejected_per_adapter),
             "n_streamed_tokens": g.n_streamed_tokens,
+            "n_client_disconnects": g.n_client_disconnects,
+            "n_timeouts": g.n_timeouts,
+            "n_retries": g.n_retries,
+            "n_failed_requests": g.n_failed_requests,
+            "n_crashes": g.n_crashes,
+            "n_recoveries": g.n_recoveries,
         }
 
 
@@ -256,7 +272,9 @@ class AsyncGateway:
 
     def __init__(self, engine: ServingEngine,
                  admission: Optional[AdmissionControl] = None,
-                 tick: float = 0.02, time_scale: float = 1.0):
+                 tick: float = 0.02, time_scale: float = 1.0,
+                 fault_plan: Optional[FaultPlan] = None,
+                 reliability: Optional[ReliabilityPolicy] = None):
         self.engine = engine
         self.admission = admission
         self.tick = tick                  # live-mode pump period (wall s)
@@ -270,6 +288,48 @@ class AsyncGateway:
         self._t0: Optional[float] = None
         self._uid = 0
         engine.on_token = self._on_token
+        # ---- fault injection / reliability (single replica = index 0) --
+        self.fault_plan = fault_plan
+        self.reliability = reliability
+        self._rel_enabled = reliability is not None and reliability.enabled
+        self._fault_active = fault_plan is not None or self._rel_enabled
+        if fault_plan is not None:
+            self._crashes = [c for c in fault_plan.crashes
+                             if c.replica == 0]
+            self._adapter_evs = [e for e in fault_plan.adapter_faults
+                                 if e.replica == 0]
+            self._straggler_evs = [e for e in fault_plan.straggler_windows
+                                   if e.replica == 0]
+            self._exec_evs = [e for e in fault_plan.executor_faults
+                              if e.replica == 0]
+            self._disconnect_evs = list(fault_plan.disconnects)
+        else:
+            self._crashes = []
+            self._adapter_evs = []
+            self._straggler_evs = []
+            self._exec_evs = []
+            self._disconnect_evs = []
+        times: set = set()
+        for c in self._crashes:
+            times.add(c.at)
+            if c.recover_at is not None:
+                times.add(c.recover_at)
+        for e in self._adapter_evs + self._straggler_evs:
+            times.add(e.at)
+            if math.isfinite(e.until):
+                times.add(e.until)
+        for e in self._exec_evs:
+            times.add(e.at)
+            times.add(e.at + e.duration)
+        for e in self._disconnect_evs:
+            times.add(e.at)
+        self._fault_times = sorted(times)
+        self._crash_seen: set = set()
+        self._pending_recover: list = []
+        self._crash_orphans: List[Request] = []
+        self._retry_q: List[Request] = []
+        self._inflight: Dict[int, Request] = {}
+        self._ckpt = {"clock": 0.0, "adapters": []}
 
     # ------------------------------------------------------------------ #
     # token fan-out (called synchronously off the engine step loop)
@@ -302,6 +362,10 @@ class AsyncGateway:
         if self.state in ("draining", "stopped"):
             self.metrics.reject(req.adapter, draining=True)
             return Rejected(req, "gateway is draining", status=503)
+        if self.engine.halted:
+            # crashed (fault injection) and not yet recovered
+            self.metrics.reject(req.adapter)
+            return Rejected(req, "no alive replicas", status=503)
         if self.admission is not None:
             reason = self.admission.decide(self.engine, req)
             if reason is not None:
@@ -309,6 +373,8 @@ class AsyncGateway:
                 return Rejected(req, reason)
         self.engine.submit([req])
         self.metrics.n_admitted += 1
+        if self._fault_active:
+            self._inflight[req.uid] = req
         if stream:
             s = CompletionStream(req)
             self._streams[req.uid] = s
@@ -340,7 +406,7 @@ class AsyncGateway:
         for req in arrivals:
             if duration is not None and req.arrival >= duration:
                 break
-            self.engine.run_until(req.arrival, strict=True)
+            self._advance(req.arrival)
             self.offer(req, stream=bool(want_stream and want_stream(req)))
             await asyncio.sleep(0)       # let stream consumers breathe
         return await self.shutdown(duration=duration, drain=drain)
@@ -363,7 +429,7 @@ class AsyncGateway:
         while True:
             await asyncio.sleep(self.tick)
             target = (loop.time() - self._t0) * self.time_scale
-            self.engine.run_until(target, strict=True)
+            self._advance(target)
 
     def _virtual_now(self) -> float:
         if self._t0 is None:
@@ -397,6 +463,218 @@ class AsyncGateway:
         return self._uid - 1
 
     # ------------------------------------------------------------------ #
+    # fault injection + request reliability (virtual-time, deterministic)
+    # ------------------------------------------------------------------ #
+    def _advance(self, target: float) -> None:
+        """Advance the engine to virtual time ``target``, segmenting the
+        interval at every fault-event boundary, retry release, and
+        request deadline so each segment runs under one fault regime.
+        With no FaultPlan/ReliabilityPolicy this is exactly
+        ``run_until(target, strict=True)`` (the determinism guard)."""
+        eng = self.engine
+        if not self._fault_active:
+            eng.run_until(target, strict=True)
+            return
+        cursor = min(eng.clock, target)
+        while True:
+            self._process_events(cursor)
+            self._release_retries(cursor)
+            nb = self._next_boundary(cursor, target)
+            if eng.halted:
+                eng.clock = max(eng.clock, nb)   # time passes while down
+            elif self._stalled_at(cursor):
+                eng.stall_until(nb)              # executor hang: no work
+            else:
+                self._apply_windows(cursor)
+                eng.run_until(nb, strict=True)
+                self._ckpt = eng.snapshot()      # last healthy state
+            if self._rel_enabled:
+                self._check_timeouts(nb)
+            if nb >= target:
+                return
+            cursor = nb
+
+    def _next_boundary(self, t: float, target: float) -> float:
+        b = target
+        for x in self._fault_times:
+            if x > t:
+                if x < b:
+                    b = x
+                break
+        for r in self._retry_q:
+            if r.retry_at is not None and t < r.retry_at < b:
+                b = r.retry_at
+        if self._rel_enabled:
+            for r in self._inflight.values():
+                if (r.finished_at is not None or r.failed_at is not None
+                        or r.disconnected_at is not None):
+                    continue
+                started = (r.retry_at if r.retry_at is not None
+                           else r.arrival)
+                d = started + self.reliability.timeout_s
+                if t < d < b:
+                    b = d
+        return b
+
+    def _apply_windows(self, t: float) -> None:
+        factor = 1.0
+        for ev in self._straggler_evs:
+            if ev.at <= t < ev.until:
+                factor = ev.factor
+        self.engine.slow_factor = factor
+        self.engine.adapters.failing = {
+            ev.adapter for ev in self._adapter_evs if ev.at <= t < ev.until}
+
+    def _stalled_at(self, t: float) -> bool:
+        return any(ev.at <= t < ev.at + ev.duration
+                   for ev in self._exec_evs)
+
+    def _process_events(self, t: float) -> None:
+        eng = self.engine
+        for c in self._crashes:
+            if c.at <= t and c not in self._crash_seen:
+                self._crash_seen.add(c)
+                self.metrics.n_crashes += 1
+                orphans = eng.drain()            # halts the engine
+                if c.recover_at is not None:
+                    self._crash_orphans.extend(orphans)
+                    self._pending_recover.append(c)
+                else:
+                    for r in orphans:
+                        self._fail(r, t)
+        for c in list(self._pending_recover):
+            if c.recover_at <= t:
+                self._pending_recover.remove(c)
+                lcf = (self.reliability.load_cost_fn
+                       if self.reliability else None)
+                eng.restore(self._ckpt, t, load_cost_fn=lcf)
+                self.metrics.n_recoveries += 1
+                orphans, self._crash_orphans = self._crash_orphans, []
+                for r in sorted(orphans, key=lambda r: r.uid):
+                    if (r.disconnected_at is not None
+                            or r.failed_at is not None):
+                        continue
+                    r.generated = 0
+                    r.admitted_at = None
+                    r.first_token_at = None
+                    r.token_times = []
+                    r.n_retries += 1
+                    self.metrics.n_retries += 1
+                    eng.submit([r])
+        for ev in list(self._disconnect_evs):
+            if ev.at <= t and 0 <= ev.request_index < len(self.trace):
+                self._disconnect_evs.remove(ev)
+                self.disconnect(self.trace[ev.request_index], at=t)
+
+    def _check_timeouts(self, now: float) -> None:
+        if self.engine.halted:
+            return                               # orphans already drained
+        rel = self.reliability
+        retry_uids = {r.uid for r in self._retry_q}
+        orphan_uids = {r.uid for r in self._crash_orphans}
+        for r in list(self._inflight.values()):
+            if (r.finished_at is not None or r.failed_at is not None
+                    or r.disconnected_at is not None
+                    or r.uid in retry_uids or r.uid in orphan_uids):
+                continue
+            started = r.retry_at if r.retry_at is not None else r.arrival
+            if now < started + rel.timeout_s:
+                continue
+            will_retry = r.n_retries < rel.max_retries
+            got = self.engine.cancel(r.uid, forget=will_retry)
+            if got is None:
+                continue
+            r.n_timeouts += 1
+            self.metrics.n_timeouts += 1
+            if will_retry:
+                r.n_retries += 1
+                self.metrics.n_retries += 1
+                r.generated = 0
+                r.admitted_at = None
+                r.first_token_at = None
+                r.token_times = []
+                r.retry_at = now + rel.backoff(r.n_retries)
+                self._retry_q.append(r)
+            else:
+                self._fail(r, now)
+
+    def _release_retries(self, now: float) -> None:
+        if not self._retry_q or self.engine.halted:
+            return
+        due = [r for r in self._retry_q if r.retry_at <= now]
+        if not due:
+            return
+        self._retry_q = [r for r in self._retry_q if r.retry_at > now]
+        for r in sorted(due, key=lambda r: r.uid):
+            self.engine.submit([r])
+
+    def _fail(self, req: Request, t: float) -> None:
+        req.failed_at = t
+        self.metrics.n_failed_requests += 1
+        s = self._streams.pop(req.uid, None)
+        if s is not None:
+            s._push(_END)
+        ev = self._done_events.pop(req.uid, None)
+        if ev is not None:
+            ev.set()
+
+    def disconnect(self, req: Request, at: Optional[float] = None) -> bool:
+        """Client went away: cancel the request engine-side (its KV slot
+        frees, its adapter unpins), close its stream, and account it
+        under ``n_client_disconnects``.  Idempotent; returns False if
+        the request already reached a terminal state."""
+        if (req.finished_at is not None or req.failed_at is not None
+                or req.disconnected_at is not None):
+            return False
+        if not self.engine.halted:
+            self.engine.cancel(req.uid, forget=False)
+        self._retry_q = [r for r in self._retry_q if r.uid != req.uid]
+        self._crash_orphans = [r for r in self._crash_orphans
+                               if r.uid != req.uid]
+        req.disconnected_at = (at if at is not None else self.engine.clock)
+        self.metrics.n_client_disconnects += 1
+        s = self._streams.pop(req.uid, None)
+        if s is not None:
+            s._push(_END)
+        ev = self._done_events.pop(req.uid, None)
+        if ev is not None:
+            ev.set()
+        return True
+
+    def _drain_faulted(self) -> None:
+        """Drain when a FaultPlan/ReliabilityPolicy is armed: keep
+        advancing virtual time in segments so pending recoveries fire,
+        backoff timers elapse, and deadlines expire.  If a pass makes no
+        progress (nothing finished, timed out, retried, or recovered and
+        the clock is pinned), the stragglers are explicitly failed —
+        every admitted request ends in exactly one terminal state."""
+        rel = self.reliability
+        step = max(rel.timeout_s if self._rel_enabled else 0.0, 1.0)
+        vt = self.engine.clock
+        prev = None
+        for _ in range(100_000):
+            live = [r for r in self._inflight.values()
+                    if r.finished_at is None and r.failed_at is None
+                    and r.disconnected_at is None]
+            if not live:
+                return
+            vt = max(vt, self.engine.clock) + step
+            self._advance(vt)
+            m = self.metrics
+            cur = (self.engine.clock,
+                   sum(1 for r in self._inflight.values()
+                       if r.finished_at is not None),
+                   m.n_timeouts, m.n_retries, m.n_failed_requests,
+                   m.n_recoveries, m.n_client_disconnects)
+            if cur == prev:
+                for r in live:
+                    if not self.engine.halted:
+                        self.engine.cancel(r.uid, forget=False)
+                    self._fail(r, vt)
+                return
+            prev = cur
+
+    # ------------------------------------------------------------------ #
     # shutdown / drain
     # ------------------------------------------------------------------ #
     async def shutdown(self, duration: Optional[float] = None,
@@ -412,9 +690,15 @@ class AsyncGateway:
                 pass
             self._pump_task = None
         if drain:
-            self.engine.run_until(None)
+            if self._fault_active:
+                self._drain_faulted()
+            else:
+                self.engine.run_until(None)
         elif duration is not None:
-            self.engine.run_until(duration)
+            if self._fault_active:
+                self._advance(duration)
+            else:
+                self.engine.run_until(duration)
         serving = self.engine.finalize()
         # close any stream cut off by a no-drain horizon
         for s in self._streams.values():
@@ -440,6 +724,13 @@ class AsyncGateway:
             "rejected_per_adapter": dict(
                 self.metrics.rejected_per_adapter),
             "n_streamed_tokens": self.metrics.n_streamed_tokens,
+            "n_client_disconnects": self.metrics.n_client_disconnects,
+            "n_timeouts": self.metrics.n_timeouts,
+            "n_retries": self.metrics.n_retries,
+            "n_failed_requests": self.metrics.n_failed_requests,
+            "n_crashes": self.metrics.n_crashes,
+            "n_recoveries": self.metrics.n_recoveries,
+            "n_load_faults": getattr(self.engine, "n_load_faults", 0),
         }
 
 
@@ -555,19 +846,30 @@ class GatewayHTTPServer:
             prompt_len = max(len(str(payload.get("prompt", "")).split()), 1)
         max_tokens = max(int(payload.get("max_tokens", 16)), 1)
         stream = bool(payload.get("stream", False))
-        res = await self.gateway.submit(
-            adapter=int(adapter), prompt_len=prompt_len,
-            output_len=max_tokens, stream=stream)
+        try:
+            res = await self.gateway.submit(
+                adapter=int(adapter), prompt_len=prompt_len,
+                output_len=max_tokens, stream=stream)
+        except NoAliveReplicasError as exc:
+            await self._respond(writer, 503, {"error": {
+                "message": str(exc), "type": "unavailable", "code": 503}})
+            return
         if isinstance(res, Rejected):
             await self._respond(writer, res.status, res.to_json())
         elif isinstance(res, CompletionStream):
             writer.write(self._head(200, "text/event-stream"))
             await writer.drain()
-            async for chunk in res:
-                writer.write(sse_format(chunk))
+            try:
+                async for chunk in res:
+                    writer.write(sse_format(chunk))
+                    await writer.drain()
+                writer.write(sse_format("[DONE]"))
                 await writer.drain()
-            writer.write(sse_format("[DONE]"))
-            await writer.drain()
+            except (ConnectionResetError, BrokenPipeError):
+                # client went away mid-stream: cancel engine-side so its
+                # KV slot frees and the loss is counted, not leaked
+                self.gateway.disconnect(res.request)
+                raise
         else:
             await self._respond(writer, 200, res.to_json())
 

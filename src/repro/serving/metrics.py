@@ -33,6 +33,12 @@ class ServingMetrics:
     n_starved_requests: int = 0  # arrived but never got a first token
     starved_per_adapter: Dict[int, int] = dataclasses.field(
         default_factory=dict)  # adapter uid -> starved request count
+    # reliability counters (all 0 on the healthy path — defaults keep
+    # pre-fault-layer runs bitwise-identical)
+    n_timeouts: int = 0        # deadline expiries observed
+    n_retries: int = 0         # re-submissions performed
+    n_failed_requests: int = 0  # requests explicitly failed (retries spent)
+    n_load_faults: int = 0     # adapter preloads/restores refused by faults
     # raw per-request TTFT samples: ``ClusterMetrics.aggregate`` pools
     # these across replicas to compute *exact* cluster percentiles (a
     # finished-weighted mean of per-replica percentiles is biased
@@ -60,7 +66,7 @@ def ttft_percentiles(ttfts) -> Dict[str, float]:
 
 def summarize(reqs: List[Request], duration: float,
               offered_tokens: float, max_kv_used: float = 0.0,
-              n_loads: int = 0) -> ServingMetrics:
+              n_loads: int = 0, n_load_faults: int = 0) -> ServingMetrics:
     finished = [r for r in reqs if r.finished_at is not None]
     out_tokens = sum(r.generated for r in reqs)
     itls = [r.itl for r in finished if r.itl is not None]
@@ -85,6 +91,10 @@ def summarize(reqs: List[Request], duration: float,
         ttft_p99=pct["p99"],
         n_starved_requests=sum(starved_per_adapter.values()),
         starved_per_adapter=starved_per_adapter,
+        n_timeouts=sum(r.n_timeouts for r in reqs),
+        n_retries=sum(r.n_retries for r in reqs),
+        n_failed_requests=sum(1 for r in reqs if r.failed_at is not None),
+        n_load_faults=n_load_faults,
         ttft_samples=[float(t) for t in ttfts],
     )
 

@@ -33,6 +33,13 @@ class Request:
     token_times: List[float] = dataclasses.field(default_factory=list)
     n_preemptions: int = 0
 
+    # reliability lifecycle (all None/0 on the healthy path)
+    n_retries: int = 0                       # re-submissions performed
+    n_timeouts: int = 0                      # deadline expiries observed
+    failed_at: Optional[float] = None        # retries exhausted here
+    retry_at: Optional[float] = None         # backoff release time
+    disconnected_at: Optional[float] = None  # client went away here
+
     @property
     def done(self) -> bool:
         return self.generated >= self.output_len

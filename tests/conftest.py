@@ -1,6 +1,25 @@
+import faulthandler
 import os
 import sys
+
+import pytest
 
 # tests run single-device (the dry-run manages its own placeholder fleet
 # in subprocesses); make `repro` importable without installation.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Per-test hang guard without the pytest-timeout plugin (not available in
+# the pinned environment): faulthandler dumps every thread's traceback
+# and aborts the process if a single test exceeds the budget.  The fault
+# tests drive retry/backoff loops that would otherwise hang silently on
+# a regression.  REPRO_TEST_TIMEOUT=0 disables (e.g. when debugging).
+_TEST_TIMEOUT_S = float(os.environ.get("REPRO_TEST_TIMEOUT", "300"))
+
+
+@pytest.fixture(autouse=True)
+def _per_test_timeout():
+    if _TEST_TIMEOUT_S > 0:
+        faulthandler.dump_traceback_later(_TEST_TIMEOUT_S, exit=True)
+    yield
+    if _TEST_TIMEOUT_S > 0:
+        faulthandler.cancel_dump_traceback_later()

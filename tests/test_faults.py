@@ -1,0 +1,484 @@
+"""Deterministic fault injection + request reliability.
+
+The contract under test: a seeded ``FaultPlan`` replays *bitwise
+identically* — across repeated runs, across the legacy object-mode
+``ServingEngine`` and the struct-of-arrays ``FastEngine``, and between
+the production cluster loop and the Digital Twin (they are the same
+loop).  On top sits the request lifecycle: deadlines, bounded
+retry-with-backoff onto survivors, per-replica circuit breakers, crash
+snapshot/restore with Fig. 4 reload costs, and client-disconnect
+cancellation — with zero lost requests (every admitted request reaches
+exactly one terminal state).
+
+An empty plan must leave every engine bitwise identical to the pre-fault
+code path (the healthy-path pinning guard).
+"""
+import asyncio
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (ClusterDigitalTwin, WorkloadSpec, generate_requests,
+                        make_adapter_pool)
+from repro.core.estimators import FittedEstimators
+from repro.serving import (AdapterLoadFault, AsyncGateway, CircuitBreaker,
+                           ClientDisconnect, ClusterRouter, EngineConfig,
+                           FaultPlan, GatewayHTTPServer, HardwareProfile,
+                           NoAliveReplicasError, Rejected, ReliabilityPolicy,
+                           ReplicaCrash, Request, ServingEngine,
+                           StragglerWindow, SyntheticExecutor,
+                           generate_fault_plan, parse_chaos_spec)
+
+EXACT_FIELDS = ("throughput", "ideal_throughput", "duration", "n_finished",
+                "n_preemptions", "n_loads", "max_kv_used", "ttft",
+                "ttft_p50", "ttft_p99", "n_starved_requests",
+                "starved_per_adapter", "n_timeouts", "n_retries",
+                "n_failed_requests", "n_load_faults")
+
+
+def mk_est() -> FittedEstimators:
+    return FittedEstimators(
+        sched=np.array([4e-4, 8e-6, 4e-6, 2.5e-5]),
+        model=np.array([2.4e-2, 2.2e-4, 6.5e-6]),
+        adapters=np.array([1.06, 0.004]),
+        load=np.array([8e-3, 1.1e-3]),
+        load_disk_mult=1.7,
+        memmax=np.array([120000.0, -60.0]))
+
+
+# --------------------------------------------------------------------------- #
+# unit: circuit breaker state machine
+# --------------------------------------------------------------------------- #
+
+def test_breaker_opens_at_threshold_and_half_opens_after_cooldown():
+    br = CircuitBreaker(threshold=3, cooldown_s=10.0)
+    br.record_failure(0.0)
+    br.record_failure(1.0)
+    assert br.state == CircuitBreaker.CLOSED and not br.blocked
+    br.record_failure(2.0)
+    assert br.state == CircuitBreaker.OPEN and br.blocked
+    assert br.n_opens == 1
+    br.tick(11.0)                       # cooldown not yet elapsed (12.0)
+    assert br.state == CircuitBreaker.OPEN
+    br.tick(12.0)
+    assert br.state == CircuitBreaker.HALF_OPEN and not br.blocked
+    br.record_success()                 # probe succeeded -> closed, reset
+    assert br.state == CircuitBreaker.CLOSED and br.failures == 0
+
+
+def test_breaker_probe_failure_reopens():
+    br = CircuitBreaker(threshold=2, cooldown_s=5.0)
+    br.record_failure(0.0)
+    br.record_failure(0.0)
+    br.tick(5.0)
+    assert br.state == CircuitBreaker.HALF_OPEN
+    br.record_failure(6.0)              # probe failed -> straight to open
+    assert br.state == CircuitBreaker.OPEN
+    assert br.n_opens == 2
+    assert br.opened_at == 6.0
+
+
+def test_breaker_routine_success_does_not_erase_failures():
+    """A replica that heartbeats fine but fails loads must still trip:
+    successes while CLOSED do not reset the failure count."""
+    br = CircuitBreaker(threshold=3, cooldown_s=5.0)
+    br.record_failure(0.0)
+    br.record_success()
+    br.record_failure(1.0)
+    br.record_success()
+    br.record_failure(2.0)
+    assert br.state == CircuitBreaker.OPEN
+
+
+# --------------------------------------------------------------------------- #
+# unit: plan generator + --chaos grammar
+# --------------------------------------------------------------------------- #
+
+def test_generate_fault_plan_deterministic():
+    kw = dict(n_replicas=3, horizon=60.0, seed=7, adapters=[1, 2, 3],
+              n_crashes=2, n_adapter_faults=1, n_stragglers=1,
+              n_executor_faults=1, n_disconnects=2, n_requests=100)
+    a, b = generate_fault_plan(**kw), generate_fault_plan(**kw)
+    assert a.events == b.events
+    assert a.summary() == {"crashes": 2, "adapter_faults": 1,
+                           "straggler_windows": 1, "executor_faults": 1,
+                           "disconnects": 2}
+    # a different seed must change at least one event time
+    c = generate_fault_plan(**{**kw, "seed": 8})
+    assert c.events != a.events
+    # events are well-formed: within the horizon, valid replica targets
+    for ev in a.crashes:
+        assert 0 <= ev.replica < 3 and 0 < ev.at < 60.0
+        assert ev.recover_at is None or ev.recover_at > ev.at
+
+
+def test_parse_chaos_spec_grammar():
+    plan = parse_chaos_spec("crash:1,loadfail:2,straggler,disconnect:3",
+                            n_replicas=2, horizon=40.0, seed=0,
+                            adapters=[0, 1], n_requests=50)
+    assert plan.summary() == {"crashes": 1, "adapter_faults": 2,
+                              "straggler_windows": 1, "executor_faults": 0,
+                              "disconnects": 3}
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        parse_chaos_spec("meteor:1", 2, 40.0)
+    # disconnects need a known stream size
+    empty = parse_chaos_spec("disconnect:2", 1, 40.0, n_requests=0)
+    assert empty.summary()["disconnects"] == 0
+
+
+# --------------------------------------------------------------------------- #
+# contract: NoAliveReplicasError
+# --------------------------------------------------------------------------- #
+
+def test_no_alive_replicas_contract():
+    est = mk_est()
+    twin = ClusterDigitalTwin(est, fast=True)
+    router = ClusterRouter(twin.specs_from_slots([4, 4]), policy="affinity")
+    router.reset()
+    router.mark_dead(0)
+    assert router.eligible() == [1]
+    with pytest.raises(NoAliveReplicasError, match="all replicas dead"):
+        router.mark_dead(1)
+    # it must stay a RuntimeError so pre-existing callers keep working
+    assert issubclass(NoAliveReplicasError, RuntimeError)
+    router.alive = [False, False]
+    with pytest.raises(NoAliveReplicasError, match="no alive replicas"):
+        router.eligible()
+
+
+# --------------------------------------------------------------------------- #
+# engine: snapshot / restore with reload costs
+# --------------------------------------------------------------------------- #
+
+def _mk_engine(seed=0, slots=4):
+    profile = HardwareProfile()
+    ranks = {i: 8 for i in range(8)}
+    ex = SyntheticExecutor(profile, ranks, slots=slots, n_adapters=8,
+                          seed=seed)
+    return ServingEngine(EngineConfig(
+        kv_capacity_tokens=20_000, adapter_slots=slots,
+        max_running=16), ex)
+
+
+def test_snapshot_restore_charges_reload_costs_and_skips_failing():
+    eng = _mk_engine()
+    eng.reset_stream()
+    assert eng.preload_adapter(1) and eng.preload_adapter(2)
+    snap = eng.snapshot()
+    assert snap["adapters"] == [1, 2]
+    eng.drain()                          # crash: halted, cache dropped
+    assert eng.halted
+    eng.adapters.failing = {2}           # adapter 2 faults during restore
+    reloaded = eng.restore(snap, now=50.0, load_cost_fn=lambda uid: 3.0)
+    assert not eng.halted
+    assert reloaded == [1]
+    assert eng.n_load_faults == 1
+    assert eng.clock == 53.0             # now + one charged reload
+    assert eng.adapters.is_loaded(1) and not eng.adapters.is_loaded(2)
+
+
+def test_preload_refused_while_adapter_failing():
+    eng = _mk_engine()
+    eng.reset_stream()
+    eng.adapters.failing = {3}
+    assert not eng.preload_adapter(3)
+    assert eng.n_load_faults == 1
+    eng.adapters.failing = set()
+    assert eng.preload_adapter(3)
+
+
+# --------------------------------------------------------------------------- #
+# cluster + twin: bitwise fault replay
+# --------------------------------------------------------------------------- #
+
+def _workload(horizon=50.0, seed=3, n_adapters=16):
+    pool = make_adapter_pool(n_adapters, [8, 16], [0.3, 0.1])
+    spec = WorkloadSpec(adapters=pool, dataset="medium", horizon=horizon,
+                        seed=seed)
+    return pool, spec, generate_requests(spec)
+
+
+def _storm(pool):
+    return FaultPlan(events=(
+        ReplicaCrash(replica=1, at=15.0, recover_at=25.0),
+        AdapterLoadFault(replica=0, adapter=pool[0].uid, at=10.0,
+                         until=30.0),
+        StragglerWindow(replica=2, at=20.0, until=30.0, factor=4.0),
+        ClientDisconnect(at=12.0, request_index=40),
+    ), seed=0)
+
+
+def _cluster_run(spec, reqs, fast, plan, rel, n_replicas=3):
+    twin = ClusterDigitalTwin(mk_est(), mode="full", fast=fast)
+    router = ClusterRouter(
+        twin.specs_from_slots([4] * n_replicas, mean_rank=12.0),
+        policy="affinity")
+    return twin.simulate_online(spec, router, requests=reqs, epoch=5.0,
+                                rebalance=True, straggler_factor=3.0,
+                                fault_plan=plan, reliability=rel)
+
+
+def _assert_equal_result(a, b):
+    for f in EXACT_FIELDS:
+        assert getattr(a.metrics, f) == getattr(b.metrics, f), f
+    assert a.online.faults.as_dict() == b.online.faults.as_dict()
+
+
+def test_cluster_faulted_run_repeats_bitwise():
+    pool, spec, reqs = _workload()
+    plan, rel = _storm(pool), ReliabilityPolicy(timeout_s=10.0)
+    a = _cluster_run(spec, reqs, True, plan, rel)
+    b = _cluster_run(spec, reqs, True, plan, rel)
+    _assert_equal_result(a, b)
+    assert a.online.faults.n_crashes == 1
+    assert a.online.faults.n_recoveries == 1
+    assert a.online.faults.n_disconnects == 1
+
+
+def test_cluster_faulted_legacy_fast_equivalence():
+    """The acceptance bar: the twin (FastEngine replicas) replays the
+    cluster's (ServingEngine replicas) faulted run bitwise — metrics
+    AND every fault counter."""
+    pool, spec, reqs = _workload()
+    plan, rel = _storm(pool), ReliabilityPolicy(timeout_s=10.0)
+    legacy = _cluster_run(spec, reqs, False, plan, rel)
+    fast = _cluster_run(spec, reqs, True, plan, rel)
+    _assert_equal_result(legacy, fast)
+    assert legacy.online.faults.n_timeouts > 0     # the storm actually bit
+
+
+def test_cluster_empty_plan_pins_healthy_path():
+    """FaultPlan(events=()) + disabled reliability must be bitwise
+    indistinguishable from not passing a plan at all, on both engines."""
+    _, spec, reqs = _workload(horizon=40.0)
+    off = ReliabilityPolicy(timeout_s=0.0)
+    for fast in (False, True):
+        base = _cluster_run(spec, reqs, fast, None, None)
+        empty = _cluster_run(spec, reqs, fast,
+                             FaultPlan(events=(), seed=0), off)
+        _assert_equal_result(base, empty)
+        assert empty.online.faults.as_dict() == \
+            {k: 0 for k in empty.online.faults.as_dict()}
+
+
+def test_cluster_crash_recovery_zero_lost():
+    """Crash -> heartbeat-detected death -> restore at recover_at with a
+    warm adapter cache: traffic is served afterwards and no admitted
+    request is lost (terminal states partition the stream)."""
+    pool, spec, reqs = _workload()
+    plan = FaultPlan(events=(
+        ReplicaCrash(replica=0, at=15.0, recover_at=25.0),), seed=0)
+    rel = ReliabilityPolicy(timeout_s=8.0, max_retries=3)
+    res = _cluster_run(spec, reqs, True, plan, rel)
+    f = res.online.faults
+    assert f.n_crashes == 1 and f.n_recoveries == 1
+    served = [r for r in reqs]           # deep-copied inside the twin;
+    n = len(served)                      # counters live in the metrics
+    m = res.metrics
+    assert m.n_finished + m.n_failed_requests \
+        + f.n_disconnects == n
+    assert m.n_finished > 0.9 * n        # recovery actually served work
+
+
+def test_cluster_timeout_retry_beats_no_retry():
+    """With a straggler + load-fault storm, the retry arm must finish
+    strictly more requests than the same run with retries disabled."""
+    pool, spec, reqs = _workload()
+    plan = FaultPlan(events=(
+        ReplicaCrash(replica=1, at=15.0),          # no recovery
+        StragglerWindow(replica=2, at=10.0, until=40.0, factor=8.0),
+    ), seed=0)
+    with_retry = _cluster_run(spec, reqs, True, plan,
+                              ReliabilityPolicy(timeout_s=6.0,
+                                                max_retries=3))
+    no_retry = _cluster_run(spec, reqs, True, plan,
+                            ReliabilityPolicy(timeout_s=6.0,
+                                              max_retries=0))
+    assert with_retry.online.faults.n_retries > 0
+    assert with_retry.metrics.n_finished > no_retry.metrics.n_finished
+    # zero lost on both arms
+    for res in (with_retry, no_retry):
+        m = res.metrics
+        assert m.n_finished + m.n_failed_requests == len(reqs)
+
+
+# --------------------------------------------------------------------------- #
+# gateway: storm replay, disconnects, 503s, shutdown [DONE]
+# --------------------------------------------------------------------------- #
+
+def _gw_arrivals(n=40):
+    return [Request(uid=i, adapter=i % 3, arrival=i * 0.5,
+                    prompt_len=32, output_len=8) for i in range(n)]
+
+
+def _gw_plan():
+    return FaultPlan(events=(
+        ReplicaCrash(replica=0, at=5.0, recover_at=9.0),
+        AdapterLoadFault(replica=0, adapter=1, at=11.0, until=14.0),
+        StragglerWindow(replica=0, at=15.0, until=17.0, factor=4.0),
+        ClientDisconnect(at=1.05, request_index=2),
+    ), seed=0)
+
+
+def test_gateway_fault_storm_deterministic_and_zero_lost():
+    def run():
+        gw = AsyncGateway(
+            _mk_engine(), fault_plan=_gw_plan(),
+            reliability=ReliabilityPolicy(timeout_s=6.0, max_retries=2,
+                                          backoff_base=0.5))
+        return asyncio.run(gw.run(iter(_gw_arrivals()), drain=True))
+
+    a, b = run(), run()
+    assert a.summary() == b.summary()
+    g = a.gateway
+    assert g.n_crashes == 1 and g.n_recoveries == 1
+    assert g.n_client_disconnects == 1
+    assert g.n_rejected > 0              # offers during the down window
+    # zero lost: every submitted request has exactly one terminal outcome
+    assert a.serving.n_finished + g.n_failed_requests \
+        + g.n_client_disconnects + g.n_rejected == g.n_submitted
+
+
+def test_gateway_empty_plan_pins_healthy_path():
+    plain = asyncio.run(AsyncGateway(_mk_engine())
+                        .run(iter(_gw_arrivals()), drain=True))
+    empty = asyncio.run(AsyncGateway(
+        _mk_engine(), fault_plan=FaultPlan(events=(), seed=0),
+        reliability=ReliabilityPolicy(timeout_s=0.0))
+        .run(iter(_gw_arrivals()), drain=True))
+    assert plain.serving == empty.serving
+
+
+def test_gateway_offer_503_while_crashed():
+    gw = AsyncGateway(_mk_engine(),
+                      fault_plan=FaultPlan(events=(
+                          ReplicaCrash(replica=0, at=1.0, recover_at=8.0),
+                      ), seed=0))
+    gw.engine.reset_stream()
+    gw.state = "serving"
+    gw._advance(2.0)                     # past the crash
+    assert gw.engine.halted
+    res = gw.offer(Request(uid=900, adapter=0, arrival=2.0,
+                           prompt_len=8, output_len=4))
+    assert isinstance(res, Rejected) and res.status == 503
+    assert res.reason == "no alive replicas"
+    gw._advance(9.0)                     # past recovery
+    assert not gw.engine.halted
+    res = gw.offer(Request(uid=901, adapter=0, arrival=9.0,
+                           prompt_len=8, output_len=4))
+    assert isinstance(res, Request)
+
+
+def test_gateway_disconnect_cancels_and_accounts():
+    """Public ``disconnect``: the engine-side work is cancelled (KV
+    freed, request never finishes), the stream closes, and the loss is
+    counted — exactly once (idempotent)."""
+    async def scenario():
+        gw = AsyncGateway(_mk_engine(), tick=0.001, time_scale=0.001)
+        await gw.start()
+        stream = await gw.submit(adapter=0, prompt_len=16, output_len=500,
+                                 stream=True)
+        req = stream.request
+        assert gw.disconnect(req) is True
+        assert gw.disconnect(req) is False
+        chunks = [c async for c in stream]       # _END already queued
+        rep = await gw.shutdown()
+        return req, chunks, rep
+
+    req, chunks, rep = asyncio.run(scenario())
+    assert req.disconnected_at is not None and req.finished_at is None
+    assert chunks == []
+    assert rep.gateway.n_client_disconnects == 1
+    assert rep.serving.n_finished == 0
+
+
+def test_http_client_disconnect_mid_sse_cancels_engine_side():
+    """A socket error while writing SSE chunks must cancel the request
+    in the engine and count it — not silently leak the stream."""
+    class FlakyWriter:
+        def __init__(self):
+            self.n_drains = 0
+
+        def write(self, data):
+            pass
+
+        async def drain(self):
+            self.n_drains += 1
+            if self.n_drains >= 2:       # headers ok, first chunk dies
+                raise ConnectionResetError
+
+    async def scenario():
+        gw = AsyncGateway(_mk_engine(), tick=0.001, time_scale=200.0)
+        await gw.start()
+        server = GatewayHTTPServer(gw)   # no socket needed for _completions
+        with pytest.raises(ConnectionResetError):
+            await server._completions(FlakyWriter(), {
+                "adapter": 0, "prompt_tokens": 8, "max_tokens": 50,
+                "stream": True})
+        rep = await gw.shutdown()
+        return rep
+
+    rep = asyncio.run(scenario())
+    assert rep.gateway.n_client_disconnects == 1
+    assert rep.serving.n_finished == 0
+
+
+def test_gateway_shutdown_always_emits_done_for_inflight_sse():
+    """Live-mode shutdown with an SSE stream still in flight: the stream
+    is closed with ``[DONE]`` rather than left hanging."""
+    async def scenario():
+        # time_scale ~0: the 200-token request can never finish
+        gw = AsyncGateway(_mk_engine(), tick=0.005, time_scale=0.001)
+        await gw.start()
+        server = await GatewayHTTPServer(gw, port=0).start()
+        reader, writer = await asyncio.open_connection("127.0.0.1",
+                                                       server.port)
+        body = json.dumps({"adapter": 0, "prompt_tokens": 8,
+                           "max_tokens": 200, "stream": True}).encode()
+        writer.write(b"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+                     + f"Content-Length: {len(body)}\r\n\r\n".encode()
+                     + body)
+        await writer.drain()
+        while gw.metrics.n_streams == 0:
+            await asyncio.sleep(0.005)
+        await gw.shutdown(drain=False)
+        data = await asyncio.wait_for(reader.read(), 30.0)
+        writer.close()
+        await server.stop()
+        return data.decode()
+
+    resp = asyncio.run(scenario())
+    assert resp.startswith("HTTP/1.1 200")
+    assert "data: [DONE]" in resp
+
+
+# --------------------------------------------------------------------------- #
+# property-style determinism (skipped when hypothesis is unavailable)
+# --------------------------------------------------------------------------- #
+
+def test_fault_plan_replay_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    pool, spec, reqs = _workload(horizon=20.0, n_adapters=6)
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(0, 1000), n_crashes=st.integers(0, 2),
+           n_faults=st.integers(0, 2), timeout=st.sampled_from([0.0, 6.0]))
+    def prop(seed, n_crashes, n_faults, timeout):
+        plan_kw = dict(n_replicas=2, horizon=20.0, seed=seed,
+                       adapters=[a.uid for a in pool],
+                       n_crashes=n_crashes, n_adapter_faults=n_faults,
+                       n_stragglers=1, n_disconnects=1,
+                       n_requests=len(reqs))
+        assert generate_fault_plan(**plan_kw).events == \
+            generate_fault_plan(**plan_kw).events
+        plan = generate_fault_plan(**plan_kw)
+        rel = ReliabilityPolicy(timeout_s=timeout)
+        legacy = _cluster_run(spec, reqs, False, plan, rel, n_replicas=2)
+        fast = _cluster_run(spec, reqs, True, plan, rel, n_replicas=2)
+        _assert_equal_result(legacy, fast)
+
+    prop()
