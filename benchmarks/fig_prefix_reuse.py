@@ -1,0 +1,174 @@
+"""Shared-prefix KV reuse: prefix-share x KV-pressure sweep, twin replay.
+
+The prefix-cache figure (ours; no paper counterpart — the paper's
+workloads share nothing across requests): a single KV-pressured engine
+serves prefix-structured workloads with the cross-adapter shared-prefix
+cache ON vs OFF on the *identical* request stream.  Hits skip re-prefill
+of the cached prefix (Eq. (1)'s ``pf`` term shrinks) and skip KV
+allocation of the covered blocks, so under pressure the reuse arm both
+finishes more requests and reaches first tokens sooner.  Three
+acceptance claims are asserted:
+
+* **reuse earns its keep** — pooled over the (prefix-share x KV budget)
+  grid, the cache-ON arm finishes strictly more requests than the
+  cache-OFF arm and its pooled TTFT p99 is strictly lower;
+* **OFF is bitwise free** — at ``prefix_share=0`` the cache-ON run is
+  bitwise identical to cache-OFF (hits = misses = 0): opting out of the
+  feature costs nothing;
+* **the twin replays reuse bitwise** — the object-mode engine
+  (``ServingEngine``) and the struct-of-arrays twin (``FastEngine``)
+  agree exactly on every metric *including the prefix counters*, which
+  is what makes prefix-heavy runs labelable training data.
+
+Results land in ``BENCH_prefix_reuse.json`` at the repo root; the
+committed copy is refreshed per PR so the reuse trajectory lives in its
+git history.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .common import CsvOut, fitted_estimators, is_smoke
+from repro.core import (EstimatorExecutor, WorkloadSpec, generate_requests,
+                        make_adapter_pool)
+from repro.core.fast_twin import FastEngine
+from repro.serving import EngineConfig, ServingEngine
+
+EXACT_FIELDS = ("throughput", "ideal_throughput", "duration", "n_finished",
+                "n_preemptions", "n_loads", "max_kv_used", "ttft",
+                "ttft_p50", "ttft_p99", "n_starved_requests",
+                "n_prefix_hits", "n_prefix_misses", "n_prefix_evictions",
+                "prefix_tokens_saved")
+
+
+def config(smoke: bool) -> dict:
+    if smoke:
+        return dict(n_adapters=6, slots=3, horizon=30.0, seed=5,
+                    prefix_len=200, shares=(0.0, 0.8),
+                    kv_budgets=(3900,), rates=(0.5, 0.25))
+    return dict(n_adapters=8, slots=4, horizon=60.0, seed=5,
+                prefix_len=200, shares=(0.0, 0.5, 0.9),
+                kv_budgets=(3900, 6500), rates=(0.4, 0.2))
+
+
+def run_arm(est, cfg: dict, pool, share: float, kv_tokens: int,
+            cache_on: bool, fast: bool = True):
+    """One grid cell: the engine (fast or object-mode) on the cell's
+    deterministic stream.  Streams are regenerated per arm — same seed,
+    same spec, bitwise the same requests — so arms never share mutable
+    request state."""
+    spec = WorkloadSpec(adapters=pool, dataset="medium",
+                        horizon=cfg["horizon"], seed=cfg["seed"],
+                        prefix_share=share, prefix_len=cfg["prefix_len"])
+    reqs = generate_requests(spec)
+    ranks = {a.uid: a.rank for a in pool}
+    ecfg = EngineConfig(kv_capacity_tokens=kv_tokens,
+                        adapter_slots=cfg["slots"],
+                        prefix_cache=cache_on)
+    ex = EstimatorExecutor(est, cfg["slots"], len(pool), ranks)
+    engine = (FastEngine(ecfg, ex, track_requests=False) if fast
+              else ServingEngine(ecfg, ex))
+    return engine.run(reqs, horizon=cfg["horizon"]), len(reqs)
+
+
+def pooled_p99(cells) -> float:
+    samples = np.concatenate([np.asarray(m.ttft_samples, float)
+                              for m in cells if m.ttft_samples])
+    return float(np.percentile(samples, 99))
+
+
+def main(out: CsvOut) -> None:
+    est = fitted_estimators()
+    cfg = config(is_smoke())
+    pool = make_adapter_pool(cfg["n_adapters"], [8, 16], list(cfg["rates"]))
+
+    on_cells, off_cells, grid = [], [], []
+    for share in cfg["shares"]:
+        for kv in cfg["kv_budgets"]:
+            m_on, n_reqs = run_arm(est, cfg, pool, share, kv, True)
+            m_off, _ = run_arm(est, cfg, pool, share, kv, False)
+            on_cells.append(m_on)
+            off_cells.append(m_off)
+            grid.append({
+                "prefix_share": share, "kv_tokens": kv,
+                "n_requests": n_reqs,
+                "on": {"n_finished": m_on.n_finished,
+                       "ttft_p99": m_on.ttft_p99,
+                       "throughput": m_on.throughput,
+                       "n_prefix_hits": m_on.n_prefix_hits,
+                       "n_prefix_misses": m_on.n_prefix_misses,
+                       "n_prefix_evictions": m_on.n_prefix_evictions,
+                       "prefix_tokens_saved": m_on.prefix_tokens_saved},
+                "off": {"n_finished": m_off.n_finished,
+                        "ttft_p99": m_off.ttft_p99,
+                        "throughput": m_off.throughput},
+            })
+            out.row(f"share{share}_kv{kv}", 1.0,
+                    f"fin_on={m_on.n_finished};fin_off={m_off.n_finished};"
+                    f"hits={m_on.n_prefix_hits};"
+                    f"saved={m_on.prefix_tokens_saved}")
+
+            # --- OFF is bitwise free at share=0 ------------------------- #
+            if share == 0.0:
+                for field in EXACT_FIELDS:
+                    a, b = getattr(m_on, field), getattr(m_off, field)
+                    if a != b:
+                        raise RuntimeError(
+                            f"share=0 cache-ON diverged from OFF on "
+                            f"{field}: {a} != {b}")
+                if m_on.n_prefix_hits or m_on.n_prefix_misses:
+                    raise RuntimeError(
+                        "share=0 run touched the prefix cache: "
+                        f"hits={m_on.n_prefix_hits} "
+                        f"misses={m_on.n_prefix_misses}")
+            else:
+                if m_on.n_prefix_hits < 1:
+                    raise RuntimeError(
+                        f"share={share} kv={kv}: reuse arm recorded no "
+                        "prefix hits")
+
+    # --- reuse earns its keep, pooled over the grid ---------------------- #
+    fin_on = sum(m.n_finished for m in on_cells)
+    fin_off = sum(m.n_finished for m in off_cells)
+    if fin_on <= fin_off:
+        raise RuntimeError(
+            f"reuse arm finished no more than baseline: {fin_on} <= "
+            f"{fin_off}")
+    p99_on, p99_off = pooled_p99(on_cells), pooled_p99(off_cells)
+    if p99_on >= p99_off:
+        raise RuntimeError(
+            f"reuse arm's pooled TTFT p99 not lower: {p99_on:.4f} >= "
+            f"{p99_off:.4f}")
+    out.row("pooled", 1.0,
+            f"fin_on={fin_on};fin_off={fin_off};"
+            f"p99_on={p99_on:.4f};p99_off={p99_off:.4f}")
+
+    # --- twin replays reuse bitwise (heaviest cell, cache ON) ------------ #
+    share, kv = max(cfg["shares"]), min(cfg["kv_budgets"])
+    m_fast, _ = run_arm(est, cfg, pool, share, kv, True, fast=True)
+    m_obj, _ = run_arm(est, cfg, pool, share, kv, True, fast=False)
+    for field in EXACT_FIELDS:
+        a, b = getattr(m_obj, field), getattr(m_fast, field)
+        if a != b:
+            raise RuntimeError(
+                f"twin diverged from the engine on {field}: {a} != {b}")
+    if m_obj.ttft_samples != m_fast.ttft_samples:
+        raise RuntimeError("twin TTFT samples diverged from the engine")
+    out.row("twin_replay", 1.0, "bitwise=ok")
+
+    payload = {
+        "smoke": is_smoke(),
+        "config": {k: cfg[k] for k in ("n_adapters", "slots", "horizon",
+                                       "prefix_len")},
+        "grid": grid,
+        "pooled": {"n_finished_on": fin_on, "n_finished_off": fin_off,
+                   "ttft_p99_on": p99_on, "ttft_p99_off": p99_off,
+                   "finish_advantage": fin_on - fin_off},
+        "twin_bitwise_match": True,
+    }
+    path = Path(__file__).resolve().parent.parent \
+        / "BENCH_prefix_reuse.json"
+    path.write_text(json.dumps(payload, indent=2) + "\n")

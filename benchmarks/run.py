@@ -31,6 +31,7 @@ BENCHES = (
     "fig_chaos_recovery",
     "fig_cluster_scaling",
     "fig_gateway_openloop",
+    "fig_prefix_reuse",
     "fig_rebalancing",
     "fig_sched_policies",
     "fig_twin_speed",
@@ -47,6 +48,7 @@ SMOKE_BENCHES = (
     "fig_chaos_recovery",
     "fig_cluster_scaling",
     "fig_gateway_openloop",
+    "fig_prefix_reuse",
     "fig_rebalancing",
     "fig_sched_policies",
     "fig_twin_speed",

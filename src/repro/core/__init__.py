@@ -21,6 +21,7 @@ from .dataset import (FEATURE_NAMES, PAPER_RANKS, PAPER_RATES,  # noqa
                       TARGET_NAMES, Scenario, encode_features,
                       label_scenarios, scenario_grid)
 from .workload import (DATASETS, DriftPhase, WorkloadSpec,  # noqa
+                       assign_shared_prefixes, expected_prefix_hit_rate,
                        generate_drifting_requests, generate_requests,
                        load_trace, make_adapter_pool, open_loop_arrivals,
                        replay_trace, resample_requests,

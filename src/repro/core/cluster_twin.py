@@ -60,14 +60,16 @@ class ClusterDigitalTwin:
     # ------------------------------------------------------------------ #
     def specs_from_slots(self, slots: Sequence[int],
                          mean_rank: float = 8.0,
-                         sched_policy: str = "fcfs") -> List[ReplicaSpec]:
+                         sched_policy: str = "fcfs",
+                         prefix_cache: bool = False) -> List[ReplicaSpec]:
         """Build replica specs whose KV capacity comes from the fitted
         Mem_max estimator — the DT analogue of probing each node."""
         return [ReplicaSpec(
             adapter_slots=g,
             kv_capacity_tokens=self.est.kv_capacity(g, mean_rank),
             max_running=self.max_running,
-            sched_policy=sched_policy) for g in slots]
+            sched_policy=sched_policy,
+            prefix_cache=prefix_cache) for g in slots]
 
     # ------------------------------------------------------------------ #
     def simulate(self, spec: WorkloadSpec, router: ClusterRouter,
@@ -78,10 +80,14 @@ class ClusterDigitalTwin:
         if self.mode == "mean" or requests is None:
             requests = resample_requests(spec, spec.length_stats())
         else:
-            # full mode gets the exact stream (deep copy to keep caller's)
+            # full mode gets the exact stream (deep copy to keep caller's);
+            # progress AND reliability lifecycle restart clean — replaying
+            # a chaos run's stream must not inherit its retry state
             requests = [dataclasses.replace(
                 r, generated=0, admitted_at=None, first_token_at=None,
-                finished_at=None, token_times=[], n_preemptions=0)
+                finished_at=None, token_times=[], n_preemptions=0,
+                n_retries=0, n_timeouts=0, failed_at=None, retry_at=None,
+                disconnected_at=None)
                 for r in requests]
         router.reset()
         parts = router.partition(requests)

@@ -18,7 +18,8 @@ from ..serving.policy import sched_policy_index
 from ..serving.request import Adapter
 from .estimators import FittedEstimators
 from .placement import PlacementResult, find_optimal_placement
-from .workload import WorkloadSpec, make_adapter_pool
+from .workload import (WorkloadSpec, expected_prefix_hit_rate,
+                       make_adapter_pool)
 
 PAPER_RATES = (3.2, 1.6, 0.8, 0.4, 0.1, 0.05, 0.025,
                0.0125, 0.00625, 0.003125)
@@ -28,14 +29,18 @@ FEATURE_NAMES = (
     "rate_max", "rate_min", "rate_mean", "rate_std",
     "rank_max", "rank_min", "rank_mean", "rank_std",
     "in_mean", "in_std", "out_mean", "out_std",
-    "sched_policy",
+    "sched_policy", "prefix_hit_rate",
 )
 TARGET_NAMES = ("throughput", "served_adapters", "adapter_slots")
 
 
 def encode_features(rates: Sequence[float], ranks: Sequence[int],
                     stats: Dict[str, float],
-                    sched_policy: str = "fcfs") -> np.ndarray:
+                    sched_policy: str = "fcfs",
+                    prefix_hit_rate: float = 0.0) -> np.ndarray:
+    # ``prefix_hit_rate``: expected shared-prefix cache hit rate of the
+    # workload (repro.core.workload.expected_prefix_hit_rate); 0.0 = no
+    # shared prefixes (the paper's original encoding)
     r = np.asarray(rates, float)
     k = np.asarray(ranks, float)
     return np.array([
@@ -44,6 +49,7 @@ def encode_features(rates: Sequence[float], ranks: Sequence[int],
         stats["in_mean"], stats["in_std"],
         stats["out_mean"], stats["out_std"],
         float(sched_policy_index(sched_policy)),
+        float(prefix_hit_rate),
     ])
 
 
@@ -53,6 +59,10 @@ class Scenario:
     ranks: Tuple[int, ...]
     dataset: str
     sched_policy: str = "fcfs"
+    # shared-prefix workload statistics (0.0/0 = the paper's original
+    # prefix-free scenarios)
+    prefix_share: float = 0.0
+    prefix_len: int = 0
 
     def pool(self, max_adapters: int) -> List[Adapter]:
         return make_adapter_pool(max_adapters, self.ranks, self.rates)
@@ -95,22 +105,30 @@ def label_scenarios(est: FittedEstimators, scenarios: Sequence[Scenario],
         from .sweep import SweepTask
         tasks = [SweepTask(pool=tuple(sc.pool(max_adapters)),
                            dataset=sc.dataset, horizon=horizon,
-                           seed=seed + i, sched_policy=sc.sched_policy)
+                           seed=seed + i, sched_policy=sc.sched_policy,
+                           prefix_share=sc.prefix_share,
+                           prefix_len=sc.prefix_len)
                  for i, sc in enumerate(scenarios)]
         results = runner.map(tasks)
     else:
         results = [find_optimal_placement(est, sc.pool(max_adapters),
                                           sc.dataset, horizon=horizon,
                                           seed=seed + i,
-                                          sched_policy=sc.sched_policy)
+                                          sched_policy=sc.sched_policy,
+                                          prefix_share=sc.prefix_share,
+                                          prefix_len=sc.prefix_len)
                    for i, sc in enumerate(scenarios)]
     xs, ys = [], []
     for i, (sc, res) in enumerate(zip(scenarios, results)):
         pool = sc.pool(max_adapters)
-        spec = WorkloadSpec(adapters=pool, dataset=sc.dataset)
+        spec = WorkloadSpec(adapters=pool, dataset=sc.dataset,
+                            prefix_share=sc.prefix_share,
+                            prefix_len=sc.prefix_len)
         feats = encode_features([a.rate for a in pool],
                                 [a.rank for a in pool], spec.length_stats(),
-                                sched_policy=sc.sched_policy)
+                                sched_policy=sc.sched_policy,
+                                prefix_hit_rate=expected_prefix_hit_rate(
+                                    spec))
         xs.append(feats)
         ys.append([res.throughput, res.n_adapters, res.slots])
         if verbose and (i + 1) % 10 == 0:

@@ -53,7 +53,7 @@ class DTResult:
 class DigitalTwin:
     def __init__(self, est: FittedEstimators, mode: str = "full",
                  max_running: int = 256, sched_policy: str = "fcfs",
-                 measured_step_times=None):
+                 measured_step_times=None, prefix_cache: bool = False):
         assert mode in ("full", "mean")
         # opt-in hook: a MeasuredStepTimes surface (fitted from real
         # kernel launches by benchmarks/kernels_bench.py) replaces the
@@ -65,6 +65,7 @@ class DigitalTwin:
         self.mode = mode
         self.max_running = max_running
         self.sched_policy = sched_policy
+        self.prefix_cache = prefix_cache
 
     def simulate(self, spec: WorkloadSpec, slots: int,
                  requests: Optional[List[Request]] = None,
@@ -77,10 +78,14 @@ class DigitalTwin:
         if self.mode == "mean" or requests is None:
             requests = resample_requests(spec, spec.length_stats())
         else:
-            # full mode gets the exact stream (deep copy to keep caller's)
+            # full mode gets the exact stream (deep copy to keep caller's);
+            # progress AND reliability lifecycle restart clean — replaying
+            # a chaos run's stream must not inherit its retry state
             requests = [dataclasses.replace(
                 r, generated=0, admitted_at=None, first_token_at=None,
-                finished_at=None, token_times=[], n_preemptions=0)
+                finished_at=None, token_times=[], n_preemptions=0,
+                n_retries=0, n_timeouts=0, failed_at=None, retry_at=None,
+                disconnected_at=None)
                 for r in requests]
         if dynamic_slots:
             # S-LoRA mode: the whole pool is available; each loaded adapter
@@ -91,13 +96,15 @@ class DigitalTwin:
                 adapter_slots=0, max_running=self.max_running,
                 sched_policy=self.sched_policy, dynamic_slots=True,
                 adapter_kv_tokens={u: max(int(per_rank * r), 1)
-                                   for u, r in ranks.items()})
+                                   for u, r in ranks.items()},
+                prefix_cache=self.prefix_cache)
             slots_for_est = n
         else:
             cfg = EngineConfig(
                 kv_capacity_tokens=self.est.kv_capacity(slots, mean_rank),
                 adapter_slots=slots, max_running=self.max_running,
-                sched_policy=self.sched_policy)
+                sched_policy=self.sched_policy,
+                prefix_cache=self.prefix_cache)
             slots_for_est = slots
         engine = ServingEngine(cfg, EstimatorExecutor(
             self.est, slots_for_est, n, ranks))

@@ -49,6 +49,7 @@ from ..serving.engine import EngineConfig, StepTrace
 from ..serving.metrics import ServingMetrics, ttft_percentiles
 from ..serving.policy import (SchedView, make_sched_policy,
                               overrides_on_admit, overrides_victim)
+from ..serving.prefix_cache import SharedPrefixCache
 from ..serving.request import Request
 from .digital_twin import DigitalTwin, DTResult, EstimatorExecutor
 from .estimators import FittedEstimators
@@ -177,6 +178,34 @@ class _FastAdapterCache:
     def touch(self, uid: int, now: float) -> None:
         if uid in self.loaded:
             self.loaded[uid] = now
+
+
+class _FastKVPool:
+    """``PagedKVCache``'s block-accounting surface over ``FastEngine``'s
+    scalar free-block counter — the very same ``SharedPrefixCache``
+    instance class drives both engines, so cache decisions are identical
+    by construction."""
+
+    __slots__ = ("_eng",)
+
+    def __init__(self, eng: "FastEngine"):
+        self._eng = eng
+
+    def blocks_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self._eng._block_size)
+
+    @property
+    def free_blocks(self) -> int:
+        return self._eng._free_blocks
+
+    def reserve_blocks(self, n_blocks: int) -> bool:
+        if n_blocks > self._eng._free_blocks:
+            return False
+        self._eng._free_blocks -= n_blocks
+        return True
+
+    def release_blocks(self, n_blocks: int) -> None:
+        self._eng._free_blocks += n_blocks
 
 
 class _RowView(SchedView):
@@ -330,6 +359,14 @@ class FastEngine:
         self._rpos: Dict[int, int] = {}         # row id -> slot in _run
         self._free_blocks = self._total_blocks
         self._adapters = _FastAdapterCache(self.cfg.adapter_slots)
+        # shared-prefix cache over the scalar block pool; holder ids are
+        # row indices (the object engine uses request uids — equivalent,
+        # both are stable per in-flight request)
+        self._pfx_id: List[Optional[int]] = []
+        self._pfx_len: List[int] = []
+        self.prefix: Optional[SharedPrefixCache] = \
+            SharedPrefixCache(_FastKVPool(self)) \
+            if self.cfg.prefix_cache else None
 
     @property
     def scheduler(self) -> _SchedCounts:
@@ -377,6 +414,8 @@ class FastEngine:
             self._ads.append(r.adapter)
             self._prompts.append(r.prompt_len)
             self._outs.append(r.output_len)
+            self._pfx_id.append(r.prefix_id)
+            self._pfx_len.append(r.prefix_len)
             if fresh:
                 self._generated[i] = 0
                 self._n_pre[i] = 0
@@ -457,6 +496,8 @@ class FastEngine:
         self._remove_running(victim)
         self._kv_free(victim)
         self._adapters.unpin(int(self._adapter[victim]))
+        if self.prefix is not None:
+            self.prefix.release(victim)
         self._n_pre[victim] += 1
         self.waiting.appendleft(victim)
         ad = int(self._adapter[victim])
@@ -470,6 +511,13 @@ class FastEngine:
         preempted: List[int] = []
         for i in snapshot:
             while not self._kv_alloc(i, 1):
+                # idle (zero-ref) shared prefixes are reclaimed before any
+                # request is preempted (mirrors Scheduler.schedule; the
+                # vectorized fast path never reaches here when blocks
+                # suffice, in which case the object loop would not evict
+                # either)
+                if self.prefix is not None and self.prefix.evict_idle_lru():
+                    continue
                 victim = self._preempt_one()
                 if victim is None:
                     break
@@ -542,6 +590,9 @@ class FastEngine:
             ads = self._ads
             prompts = self._prompts
             outs = self._outs
+            pc = self.prefix
+            pfx_ids = self._pfx_id
+            pfx_lens = self._pfx_len
             wa = self._wait_ads
             max_running = self._max_running
             adm_rows = self._admitted_rows
@@ -564,12 +615,54 @@ class FastEngine:
                     continue
                 g = int(gen[i])
                 ctx = prompts[i] + g
-                if -(-(ctx + 1) // bs) > self._free_blocks:
-                    break
+                # uid-aware need (mirrors PagedKVCache.can_allocate with
+                # uid=): rows preempted mid-decode-scan can hold a
+                # residual block that must be credited, not re-counted
+                held_t = int(kv_tokens[i])
+                held_b = int(self._kv_blocks[i])
+                if pc is None:
+                    if -(-(held_t + ctx + 1) // bs) - held_b \
+                            > self._free_blocks:
+                        break
+                    covered = want_insert = 0
+                    pfx_active = False
+                else:
+                    # prefix-aware KV gate — the retry chain (evict idle
+                    # prefix -> serve uncached -> head-of-line stop) is a
+                    # faithful transcription of Scheduler.schedule's
+                    pid = pfx_ids[i]
+                    pfx_active = pid is not None \
+                        and 0 < min(pfx_lens[i], prompts[i])
+                    covered = want_insert = 0
+                    if pfx_active:
+                        covered, want_insert = pc.plan(
+                            pid, pfx_lens[i], prompts[i])
+                    stop = False
+                    while True:
+                        if covered or want_insert:
+                            fits = pc.fit_blocks(covered, want_insert,
+                                                 ctx) <= self._free_blocks
+                        else:
+                            fits = -(-(held_t + ctx + 1) // bs) - held_b \
+                                <= self._free_blocks
+                        if fits:
+                            break
+                        if pc.evict_idle_lru(exclude=pid):
+                            continue
+                        if want_insert:
+                            want_insert = 0
+                            continue
+                        stop = True
+                        break
+                    if stop:
+                        break
                 if cache.load(a, now):               # cold load
                     load_lat += self._times.load(a)
                 cache.pin(a)
-                self._kv_alloc(i, ctx + 1)           # result unused — the
+                if pfx_active:
+                    pc.commit(i, pid, covered, want_insert)
+                self._kv_alloc(i, ctx + 1 - covered - want_insert)
+                # result unused — the
                 # engine admits unconditionally once slots+KV checks passed
                 self._admitted_at[i] = now
                 self._append_running(i)
@@ -587,7 +680,7 @@ class FastEngine:
                     wa[a] = c
                 else:
                     del wa[a]
-                pf += ctx
+                pf += ctx - covered
                 can_new = (len(loaded) < cache.slots
                            or len(pinned) < len(loaded))
             self._adm_min = adm_min
@@ -637,11 +730,14 @@ class FastEngine:
         if rem_min <= 0:
             # a finish may have happened: remove done rows, refresh the
             # countdown from the survivors
+            pc = self.prefix
             for i in fin_rows:
                 self._finished[i] = t
                 self._remove_running(i)
                 self._kv_free(i)
                 self._adapters.unpin(self._ads[i])
+                if pc is not None:
+                    pc.release(i)
             if fin_rows and self._track:
                 self._sync_rows(fin_rows)
             m = self._n_run
@@ -789,6 +885,11 @@ class FastEngine:
             n_retries=n_retries,
             n_failed_requests=n_failed,
             n_load_faults=self.n_load_faults,
+            n_prefix_hits=self.prefix.n_hits if self.prefix else 0,
+            n_prefix_misses=self.prefix.n_misses if self.prefix else 0,
+            n_prefix_evictions=self.prefix.n_evictions if self.prefix else 0,
+            prefix_tokens_saved=self.prefix.tokens_saved
+            if self.prefix else 0,
             ttft_samples=[float(t) for t in ttfts],
         )
 
@@ -807,6 +908,8 @@ class FastEngine:
             i = int(self._run[s])
             self._kv_free(i)
             self._adapters.unpin(int(self._adapter[i]))
+            if self.prefix is not None:
+                self.prefix.release(i)
         self._n_run = 0
         self._rpos.clear()
         self._rem_min = math.inf
@@ -855,6 +958,8 @@ class FastEngine:
         self.clock = max(now, self.clock)
         self._adapters.loaded.clear()
         self._adapters.pinned.clear()
+        if self.prefix is not None:
+            self.prefix.wipe()
         reloaded: List[int] = []
         for uid in snap.get("adapters", []):
             if uid in self._adapters.failing:
@@ -880,6 +985,8 @@ class FastEngine:
             self._remove_running(row)
             self._kv_free(row)
             self._adapters.unpin(self._ads[row])
+            if self.prefix is not None:
+                self.prefix.release(row)
             m = self._n_run
             if m:
                 run = self._run[:m]
@@ -930,7 +1037,7 @@ class FastTwin:
 
     def __init__(self, est: FittedEstimators, mode: str = "full",
                  max_running: int = 256, sched_policy: str = "fcfs",
-                 measured_step_times=None):
+                 measured_step_times=None, prefix_cache: bool = False):
         assert mode in ("full", "mean")
         # same opt-in hook as DigitalTwin: attach the measured kernel
         # step-time surface to the fits (dynamic-slot delegation passes
@@ -941,6 +1048,7 @@ class FastTwin:
         self.mode = mode
         self.max_running = max_running
         self.sched_policy = sched_policy
+        self.prefix_cache = prefix_cache
 
     def simulate(self, spec: WorkloadSpec, slots: int,
                  requests: Optional[List[Request]] = None,
@@ -948,7 +1056,8 @@ class FastTwin:
                  dynamic_slots: bool = False) -> DTResult:
         if dynamic_slots:
             return DigitalTwin(self.est, self.mode, self.max_running,
-                               sched_policy=self.sched_policy) \
+                               sched_policy=self.sched_policy,
+                               prefix_cache=self.prefix_cache) \
                 .simulate(spec, slots, requests, horizon,
                           dynamic_slots=True)
         t0 = time.perf_counter()
@@ -960,7 +1069,8 @@ class FastTwin:
         cfg = EngineConfig(
             kv_capacity_tokens=self.est.kv_capacity(slots, mean_rank),
             adapter_slots=slots, max_running=self.max_running,
-            sched_policy=self.sched_policy)
+            sched_policy=self.sched_policy,
+            prefix_cache=self.prefix_cache)
         engine = FastEngine(cfg, EstimatorExecutor(self.est, slots, n,
                                                    ranks),
                             track_requests=False)

@@ -39,9 +39,11 @@ class PlacementPipeline:
     # ------------------------------------------------------------------ #
     def recommend(self, rates: Sequence[float], ranks: Sequence[int],
                   length_stats: Dict[str, float],
-                  sched_policy: str = "fcfs") -> Dict[str, float]:
+                  sched_policy: str = "fcfs",
+                  prefix_hit_rate: float = 0.0) -> Dict[str, float]:
         x = encode_features(rates, ranks, length_stats,
-                            sched_policy=sched_policy)[None]
+                            sched_policy=sched_policy,
+                            prefix_hit_rate=prefix_hit_rate)[None]
         t0 = time.perf_counter()
         y = np.asarray(self.model.predict(x))[0]
         dt = time.perf_counter() - t0

@@ -35,7 +35,7 @@ from .digital_twin import DigitalTwin
 from .estimators import FittedEstimators
 from .fast_twin import FastTwin
 from .forest import RandomForest
-from .workload import WorkloadSpec
+from .workload import WorkloadSpec, expected_prefix_hit_rate
 
 
 @dataclasses.dataclass
@@ -143,6 +143,7 @@ CLUSTER_FEATURE_NAMES = (
     "rank_max", "rank_min", "rank_mean", "rank_std",
     "in_mean", "in_std", "out_mean", "out_std",
     "n_replicas", "pool_size", "total_rate", "sched_policy",
+    "prefix_hit_rate",
 )
 CLUSTER_TARGET_NAMES = ("total_throughput", "served_adapters",
                         "slots_per_replica")
@@ -150,7 +151,10 @@ CLUSTER_TARGET_NAMES = ("total_throughput", "served_adapters",
 
 def encode_cluster_features(rates: Sequence[float], ranks: Sequence[int],
                             stats: Dict[str, float], n_replicas: int,
-                            sched_policy: str = "fcfs") -> np.ndarray:
+                            sched_policy: str = "fcfs",
+                            prefix_hit_rate: float = 0.0) -> np.ndarray:
+    # ``prefix_hit_rate``: expected shared-prefix cache hit rate of the
+    # workload; 0.0 = prefix-free (the pre-cache encoding)
     r = np.asarray(rates, float)
     k = np.asarray(ranks, float)
     return np.array([
@@ -160,6 +164,7 @@ def encode_cluster_features(rates: Sequence[float], ranks: Sequence[int],
         stats["out_mean"], stats["out_std"],
         float(n_replicas), float(len(r)), float(r.sum()),
         float(sched_policy_index(sched_policy)),
+        float(prefix_hit_rate),
     ])
 
 
@@ -169,14 +174,21 @@ def find_cluster_placement_joint(
         n_grid: Optional[Sequence[int]] = None,
         slot_grid=default_slot_grid, policy: str = "affinity",
         early_stop: int = 2, fast: bool = True,
-        sched_policy: str = "fcfs") -> PlacementResult:
+        sched_policy: str = "fcfs",
+        prefix_share: float = 0.0,
+        prefix_len: int = 0) -> PlacementResult:
     """Sweep (served adapters N, per-replica slots G) through the
     ``ClusterDigitalTwin`` on the *joint* workload — candidate configs
     are scored with the same router the online fleet uses, so the labels
     include routing/affinity effects the per-replica reuse misses.
     ``fast`` selects the struct-of-arrays replica engines (same labels);
-    ``sched_policy`` is every replica engine's admission policy."""
+    ``sched_policy`` is every replica engine's admission policy.
+    ``prefix_share``/``prefix_len`` make the workload's shared-prefix
+    structure a sweep axis: replica engines enable the shared-prefix KV
+    cache whenever the workload carries prefixes, so the labels include
+    the cache's admission-capacity effect."""
     twin = ClusterDigitalTwin(est, mode="mean", fast=fast)
+    use_prefix = prefix_share > 0 and prefix_len > 0
     if n_grid is None:
         n_grid = sorted({max(1, len(pool) // k) for k in
                          (8, 4, 2)} | {len(pool)})
@@ -187,13 +199,16 @@ def find_cluster_placement_joint(
         served = list(pool[:n])
         mean_rank = sum(a.rank for a in served) / len(served)
         spec = WorkloadSpec(adapters=served, dataset=dataset,
-                            horizon=horizon, seed=seed)
+                            horizon=horizon, seed=seed,
+                            prefix_share=prefix_share,
+                            prefix_len=prefix_len)
         best_at_n: Optional[PlacementPoint] = None
         for g in slot_grid(max(n // n_replicas, 1)):
             router = ClusterRouter(
                 twin.specs_from_slots([g] * n_replicas,
                                       mean_rank=mean_rank,
-                                      sched_policy=sched_policy),
+                                      sched_policy=sched_policy,
+                                      prefix_cache=use_prefix),
                 policy=policy)
             m = twin.simulate(spec, router).metrics
             pt = PlacementPoint(
@@ -240,21 +255,27 @@ def label_cluster_scenarios(
         tasks = [SweepTask(pool=tuple(sc.pool(max_adapters)),
                            dataset=sc.dataset, horizon=horizon,
                            seed=seed + i, n_replicas=n_rep,
-                           sched_policy=sc.sched_policy)
+                           sched_policy=sc.sched_policy,
+                           prefix_share=getattr(sc, "prefix_share", 0.0),
+                           prefix_len=getattr(sc, "prefix_len", 0))
                  for i, (sc, n_rep) in enumerate(grid)]
         results = runner.map(tasks)
     else:
         results = [find_cluster_placement_joint(
             est, sc.pool(max_adapters), sc.dataset, n_replicas=n_rep,
-            horizon=horizon, seed=seed + i, sched_policy=sc.sched_policy)
+            horizon=horizon, seed=seed + i, sched_policy=sc.sched_policy,
+            prefix_share=getattr(sc, "prefix_share", 0.0),
+            prefix_len=getattr(sc, "prefix_len", 0))
             for i, (sc, n_rep) in enumerate(grid)]
     for i, ((sc, n_rep), res) in enumerate(zip(grid, results)):
         pool = sc.pool(max_adapters)
-        stats = WorkloadSpec(adapters=pool,
-                             dataset=sc.dataset).length_stats()
+        spec = WorkloadSpec(adapters=pool, dataset=sc.dataset,
+                            prefix_share=getattr(sc, "prefix_share", 0.0),
+                            prefix_len=getattr(sc, "prefix_len", 0))
         xs.append(encode_cluster_features(
             [a.rate for a in pool], [a.rank for a in pool],
-            stats, n_rep, sched_policy=sc.sched_policy))
+            spec.length_stats(), n_rep, sched_policy=sc.sched_policy,
+            prefix_hit_rate=expected_prefix_hit_rate(spec)))
         ys.append([res.throughput, res.n_adapters, res.slots])
         if verbose and (i + 1) % 10 == 0:
             print(f"  labelled {i + 1} cluster points")
@@ -272,10 +293,12 @@ class ClusterPlacementModel:
 
     def recommend(self, rates: Sequence[float], ranks: Sequence[int],
                   length_stats: Dict[str, float], n_replicas: int,
-                  sched_policy: str = "fcfs") -> Dict[str, float]:
+                  sched_policy: str = "fcfs",
+                  prefix_hit_rate: float = 0.0) -> Dict[str, float]:
         x = encode_cluster_features(rates, ranks, length_stats,
                                     n_replicas,
-                                    sched_policy=sched_policy)[None]
+                                    sched_policy=sched_policy,
+                                    prefix_hit_rate=prefix_hit_rate)[None]
         y = np.asarray(self.model.predict(x))[0]
         return {
             "total_throughput": float(y[0]),
@@ -309,10 +332,12 @@ class ClusterModelNodeView:
 
     def recommend(self, rates: Sequence[float], ranks: Sequence[int],
                   length_stats: Dict[str, float],
-                  sched_policy: Optional[str] = None) -> Dict[str, float]:
+                  sched_policy: Optional[str] = None,
+                  prefix_hit_rate: float = 0.0) -> Dict[str, float]:
         rec = self.model.recommend(
             rates, ranks, length_stats, n_replicas=1,
-            sched_policy=sched_policy or self.sched_policy)
+            sched_policy=sched_policy or self.sched_policy,
+            prefix_hit_rate=prefix_hit_rate)
         return {
             "throughput": rec["total_throughput"],
             "served_adapters": rec["served_adapters"],
@@ -352,7 +377,9 @@ def find_optimal_placement(
         slot_grid=default_slot_grid, dt_mode: str = "mean",
         early_stop: int = 2, fast: bool = True,
         sched_policy: str = "fcfs",
-        measured_step_times=None) -> PlacementResult:
+        measured_step_times=None,
+        prefix_share: float = 0.0,
+        prefix_len: int = 0) -> PlacementResult:
     """Sweep served-adapter counts (and slots) through the DT.
 
     ``fast`` (default) runs each point on the struct-of-arrays
@@ -363,10 +390,14 @@ def find_optimal_placement(
     ``measured_step_times`` (a ``MeasuredStepTimes``) swaps the analytic
     Lat_model/Lat_adapters terms for kernel-measured fits, so the chosen
     (N*, G*) reflects real kernel costs; ``None`` is bitwise the
-    pre-hook sweep."""
+    pre-hook sweep.  ``prefix_share``/``prefix_len`` give the synthetic
+    workload a shared-prefix structure and enable the twin's shared-prefix
+    KV cache, so (N*, G*) reflects the cache's admission-capacity gain."""
+    use_prefix = prefix_share > 0 and prefix_len > 0
     dt = (FastTwin if fast else DigitalTwin)(
         est, mode=dt_mode, sched_policy=sched_policy,
-        measured_step_times=measured_step_times)
+        measured_step_times=measured_step_times,
+        prefix_cache=use_prefix)
     if n_grid is None:
         n_grid = sorted({max(1, len(pool) // k) for k in
                          (16, 8, 4, 3, 2)} | {len(pool)})
@@ -377,7 +408,9 @@ def find_optimal_placement(
     for n in sorted(n_grid):
         adapters = list(pool[:n])
         spec = WorkloadSpec(adapters=adapters, dataset=dataset,
-                            horizon=horizon, seed=seed)
+                            horizon=horizon, seed=seed,
+                            prefix_share=prefix_share,
+                            prefix_len=prefix_len)
         best_at_n: Optional[PlacementPoint] = None
         for g in slot_grid(n):
             res = dt.simulate(spec, slots=g)

@@ -49,6 +49,8 @@ class SweepTask:
     early_stop: int = 2
     policy: str = "affinity"
     sched_policy: str = "fcfs"
+    prefix_share: float = 0.0
+    prefix_len: int = 0
 
 
 def run_task(est: FittedEstimators, task: SweepTask) -> PlacementResult:
@@ -59,11 +61,13 @@ def run_task(est: FittedEstimators, task: SweepTask) -> PlacementResult:
             est, list(task.pool), task.dataset, n_replicas=task.n_replicas,
             horizon=task.horizon, seed=task.seed, n_grid=n_grid,
             policy=task.policy, early_stop=task.early_stop,
-            sched_policy=task.sched_policy)
+            sched_policy=task.sched_policy,
+            prefix_share=task.prefix_share, prefix_len=task.prefix_len)
     return find_optimal_placement(
         est, list(task.pool), task.dataset, horizon=task.horizon,
         seed=task.seed, n_grid=n_grid, dt_mode=task.dt_mode,
-        early_stop=task.early_stop, sched_policy=task.sched_policy)
+        early_stop=task.early_stop, sched_policy=task.sched_policy,
+        prefix_share=task.prefix_share, prefix_len=task.prefix_len)
 
 
 _WORKER_EST: Optional[FittedEstimators] = None

@@ -35,6 +35,12 @@ class WorkloadSpec:
     dataset: str = "medium"           # small | medium | large | sharegpt
     horizon: float = 600.0
     seed: int = 0
+    # shared-prefix statistics: each adapter (tenant) owns one system
+    # prompt of ``prefix_len`` tokens; a ``prefix_share`` fraction of its
+    # requests carry it (prepended to the sampled prompt).  0.0/0 = no
+    # prefixes — generated streams are bitwise identical to before.
+    prefix_share: float = 0.0
+    prefix_len: int = 0
 
     @property
     def total_rate(self) -> float:
@@ -68,6 +74,46 @@ def _sample_lengths(dataset: str, n: int, rng) -> Tuple[np.ndarray, np.ndarray]:
     raise ValueError(dataset)
 
 
+def assign_shared_prefixes(reqs: List[Request], share: float,
+                           prefix_len: int, seed: int = 0) -> List[Request]:
+    """Mark a ``share`` fraction of requests as carrying their tenant's
+    shared system prompt: the carrier's ``prompt_len`` grows by
+    ``prefix_len`` and ``prefix_id`` is set to the adapter uid (one
+    prompt per tenant, shared across all its requests).
+
+    Carrier selection uses its own RNG stream (``seed + 7919``), so the
+    base arrival/length draws are untouched — ``share=0`` leaves the
+    stream bitwise identical, and two shares of the same stream differ
+    only in the prefix fields."""
+    if share <= 0 or prefix_len <= 0 or not reqs:
+        return reqs
+    rng = np.random.default_rng(seed + 7919)
+    carrier = rng.random(len(reqs)) < share
+    for r, c in zip(reqs, carrier):
+        if c:
+            r.prefix_id = r.adapter
+            r.prefix_len = prefix_len
+            r.prompt_len += prefix_len
+    return reqs
+
+
+def expected_prefix_hit_rate(spec: WorkloadSpec) -> float:
+    """Analytic prefix-cache hit-rate estimate from workload statistics
+    (the twin-side model and the placement features consume this): per
+    tenant, every carrier after the first is an expected hit, so the
+    expected hit count is ``max(rate * horizon * share - 1, 0)``,
+    normalized by total offered requests.  Ignores capacity evictions —
+    an upper bound that tightens as slot pressure falls."""
+    if spec.prefix_share <= 0 or spec.prefix_len <= 0:
+        return 0.0
+    total = sum(a.rate * spec.horizon for a in spec.adapters if a.rate > 0)
+    if total <= 0:
+        return 0.0
+    hits = sum(max(a.rate * spec.horizon * spec.prefix_share - 1.0, 0.0)
+               for a in spec.adapters if a.rate > 0)
+    return hits / total
+
+
 def generate_requests(spec: WorkloadSpec) -> List[Request]:
     rng = np.random.default_rng(spec.seed)
     reqs: List[Request] = []
@@ -90,7 +136,8 @@ def generate_requests(spec: WorkloadSpec) -> List[Request]:
     reqs.sort(key=lambda r: r.arrival)
     for i, r in enumerate(reqs):
         r.uid = i
-    return reqs
+    return assign_shared_prefixes(reqs, spec.prefix_share, spec.prefix_len,
+                                  seed=spec.seed)
 
 
 def _moment_sampler(mean: float, std: float, rng, lo: int):
@@ -128,7 +175,8 @@ def resample_requests(spec: WorkloadSpec, stats: Dict[str, float],
     reqs.sort(key=lambda r: r.arrival)
     for i, r in enumerate(reqs):
         r.uid = i
-    return reqs
+    return assign_shared_prefixes(reqs, spec.prefix_share, spec.prefix_len,
+                                  seed=spec.seed + seed_shift)
 
 
 def make_adapter_pool(n: int, ranks: Sequence[int], rates: Sequence[float],
@@ -145,7 +193,8 @@ def make_adapter_pool(n: int, ranks: Sequence[int], rates: Sequence[float],
 
 def open_loop_arrivals(pool: Sequence[Adapter], dataset: str = "medium",
                        horizon: float = math.inf, seed: int = 0,
-                       start_uid: int = 0) -> Iterator[Request]:
+                       start_uid: int = 0, prefix_share: float = 0.0,
+                       prefix_len: int = 0) -> Iterator[Request]:
     """Lazy merged per-adapter Poisson arrival process.
 
     Unlike ``generate_requests`` (which materializes a closed horizon up
@@ -157,6 +206,11 @@ def open_loop_arrivals(pool: Sequence[Adapter], dataset: str = "medium",
     different (equally valid) streams for the same seed.
     """
     rng = np.random.default_rng(seed)
+    # carrier flags come from a separate RNG stream (matching
+    # ``assign_shared_prefixes``): prefix_share=0 draws nothing, so the
+    # base arrival/length stream stays bitwise identical
+    prng = np.random.default_rng(seed + 7919) \
+        if prefix_share > 0 and prefix_len > 0 else None
     heap: List[Tuple[float, int, float]] = []
     for ad in pool:
         if ad.rate <= 0:
@@ -169,9 +223,14 @@ def open_loop_arrivals(pool: Sequence[Adapter], dataset: str = "medium",
         if t >= horizon:
             continue                     # this adapter's clock is done
         ins, outs = _sample_lengths(dataset, 1, rng)
-        yield Request(uid=uid, adapter=adapter_uid, arrival=float(t),
+        req = Request(uid=uid, adapter=adapter_uid, arrival=float(t),
                       prompt_len=int(ins[0]),
                       output_len=max(int(outs[0]), 1))
+        if prng is not None and prng.random() < prefix_share:
+            req.prefix_id = adapter_uid
+            req.prefix_len = prefix_len
+            req.prompt_len += prefix_len
+        yield req
         uid += 1
         heapq.heappush(
             heap, (t + rng.exponential(1.0 / rate), adapter_uid, rate))
@@ -184,7 +243,8 @@ def replay_trace(requests: Iterable[Request]) -> Iterator[Request]:
     is the deterministic-equivalence guard in tests/test_gateway.py."""
     for r in sorted(requests, key=lambda r: (r.arrival, r.uid)):
         yield Request(uid=r.uid, adapter=r.adapter, arrival=r.arrival,
-                      prompt_len=r.prompt_len, output_len=r.output_len)
+                      prompt_len=r.prompt_len, output_len=r.output_len,
+                      prefix_id=r.prefix_id, prefix_len=r.prefix_len)
 
 
 def save_trace(path: Union[str, Path],
@@ -192,7 +252,8 @@ def save_trace(path: Union[str, Path],
     """Persist an arrival trace as JSON (only the immutable request
     identity — uid/adapter/arrival/lengths — not serving progress)."""
     rows = [{"uid": r.uid, "adapter": r.adapter, "arrival": r.arrival,
-             "prompt_len": r.prompt_len, "output_len": r.output_len}
+             "prompt_len": r.prompt_len, "output_len": r.output_len,
+             "prefix_id": r.prefix_id, "prefix_len": r.prefix_len}
             for r in requests]
     Path(path).write_text(json.dumps(rows))
 
@@ -203,7 +264,11 @@ def load_trace(path: Union[str, Path]) -> List[Request]:
     return [Request(uid=int(r["uid"]), adapter=int(r["adapter"]),
                     arrival=float(r["arrival"]),
                     prompt_len=int(r["prompt_len"]),
-                    output_len=max(int(r["output_len"]), 1))
+                    output_len=max(int(r["output_len"]), 1),
+                    # absent in pre-prefix traces -> None/0 (no prefix)
+                    prefix_id=(None if r.get("prefix_id") is None
+                               else int(r["prefix_id"])),
+                    prefix_len=int(r.get("prefix_len", 0) or 0))
             for r in rows]
 
 
@@ -244,7 +309,8 @@ def rotating_hot_phases(pool: Sequence[Adapter], horizon: float,
 
 def generate_drifting_requests(pool: Sequence[Adapter], dataset: str,
                                horizon: float, phases: Sequence[DriftPhase],
-                               seed: int = 0) -> List[Request]:
+                               seed: int = 0, prefix_share: float = 0.0,
+                               prefix_len: int = 0) -> List[Request]:
     """Poisson arrivals with piecewise-constant per-adapter rates."""
     rng = np.random.default_rng(seed)
     phases = sorted(phases, key=lambda p: p.start)
@@ -272,4 +338,4 @@ def generate_drifting_requests(pool: Sequence[Adapter], dataset: str,
     reqs.sort(key=lambda r: (r.arrival, r.uid))
     for i, r in enumerate(reqs):
         r.uid = i
-    return reqs
+    return assign_shared_prefixes(reqs, prefix_share, prefix_len, seed=seed)

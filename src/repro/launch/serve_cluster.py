@@ -123,13 +123,18 @@ def run_once(args, policy: str, verbose: bool = True) -> ClusterMetrics:
         kvs = _int_list(args.kv_tokens, args.replicas, "kv-tokens")
     else:
         kvs = [profile.kv_capacity(g, args.rank) for g in slots]
+    use_prefix = args.prefix_cache or (
+        args.prefix_share > 0 and args.prefix_len > 0)
     specs = make_replica_specs(args.replicas, slots, kvs,
-                               sched_policy=args.sched_policy)
+                               sched_policy=args.sched_policy,
+                               prefix_cache=use_prefix)
 
     pool = make_adapter_pool(args.adapters, [args.rank], [args.rate])
     ranks = {a.uid: a.rank for a in pool}
     spec = WorkloadSpec(adapters=pool, dataset=args.dataset,
-                        horizon=args.horizon, seed=args.seed)
+                        horizon=args.horizon, seed=args.seed,
+                        prefix_share=args.prefix_share,
+                        prefix_len=args.prefix_len)
     phases = None
     if args.drift > 0:
         phases = rotating_hot_phases(pool, args.horizon,
@@ -137,7 +142,9 @@ def run_once(args, policy: str, verbose: bool = True) -> ClusterMetrics:
                                      hot_rate=max(args.rate * 8, 0.2),
                                      cold_rate=args.rate / 4)
         reqs = generate_drifting_requests(pool, args.dataset, args.horizon,
-                                          phases, seed=args.seed)
+                                          phases, seed=args.seed,
+                                          prefix_share=args.prefix_share,
+                                          prefix_len=args.prefix_len)
     else:
         reqs = generate_requests(spec)
 
@@ -260,6 +267,14 @@ def build_parser() -> argparse.ArgumentParser:
                     help="run every routing policy on the same workload")
     ap.add_argument("--compare-sched-policies", action="store_true",
                     help="run every scheduling policy on the same workload")
+    ap.add_argument("--prefix-share", type=float, default=0.0,
+                    help="fraction of requests carrying their adapter's "
+                         "shared prompt prefix (enables the prefix cache)")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="shared-prefix length in tokens")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable the cross-adapter shared-prefix KV cache "
+                         "even when the synthetic workload has no prefixes")
     ap.add_argument("--dataset", default="medium")
     ap.add_argument("--horizon", type=float, default=60.0)
     ap.add_argument("--seed", type=int, default=0)

@@ -3,6 +3,7 @@ from .engine import EngineConfig, ServingEngine  # noqa
 from .executor import (HardwareProfile, JaxExecutor, StepTiming,  # noqa
                        SyntheticExecutor)
 from .kv_cache import PagedKVCache  # noqa
+from .prefix_cache import PrefixEntry, SharedPrefixCache  # noqa
 from .metrics import ServingMetrics, smape, smape_vec, summarize  # noqa
 from .request import Adapter, Request  # noqa
 from .scheduler import Scheduler, StepPlan  # noqa

@@ -65,6 +65,8 @@ class ReplicaSpec:
     # admission/preemption policy of this replica's engine
     # (repro.serving.policy registry)
     sched_policy: str = "fcfs"
+    # cross-adapter shared-prefix KV cache (repro.serving.prefix_cache)
+    prefix_cache: bool = False
 
     def engine_config(self) -> EngineConfig:
         return EngineConfig(
@@ -72,14 +74,16 @@ class ReplicaSpec:
             adapter_slots=self.adapter_slots,
             max_running=self.max_running,
             block_size=self.block_size,
-            sched_policy=self.sched_policy)
+            sched_policy=self.sched_policy,
+            prefix_cache=self.prefix_cache)
 
 
 def make_replica_specs(
         n: int, adapter_slots: Union[int, Sequence[int]],
         kv_capacity_tokens: Union[int, Sequence[int]],
         max_running: int = 256,
-        sched_policy: str = "fcfs") -> List[ReplicaSpec]:
+        sched_policy: str = "fcfs",
+        prefix_cache: bool = False) -> List[ReplicaSpec]:
     """Uniform or heterogeneous specs from scalars / per-replica lists."""
     def expand(v, name):
         vs = [v] * n if isinstance(v, int) else list(v)
@@ -89,7 +93,8 @@ def make_replica_specs(
     slots = expand(adapter_slots, "adapter_slots")
     kvs = expand(kv_capacity_tokens, "kv_capacity_tokens")
     return [ReplicaSpec(adapter_slots=s, kv_capacity_tokens=k,
-                        max_running=max_running, sched_policy=sched_policy)
+                        max_running=max_running, sched_policy=sched_policy,
+                        prefix_cache=prefix_cache)
             for s, k in zip(slots, kvs)]
 
 
@@ -177,6 +182,34 @@ class AffinityPolicy(RoutingPolicy):
         return r.least_loaded()
 
 
+@register_policy
+class PrefixAffinityPolicy(AffinityPolicy):
+    """Shared-prefix affinity with adapter-affinity fallback.
+
+    A request carrying a shared prefix prefers the least-loaded replica
+    whose prefix cache the router believes holds that prefix warm —
+    re-hitting a resident prefix skips its whole prefill, a bigger win
+    than adapter residency (prompt tokens vs a Fig. 4 load).  The same
+    overload spill as :class:`AffinityPolicy` guards against piling a
+    hot tenant onto one replica.  Requests without a prefix, and
+    prefix-cold ones, fall back to plain adapter affinity.
+    """
+    name = "prefix-affinity"
+
+    def choose(self, req: Request) -> int:
+        r = self.router
+        if req.prefix_id is not None:
+            holders = [i for i in range(r.n_replicas)
+                       if r.alive[i] and not r.breaker_blocked(i)
+                       and req.prefix_id in r.prefix_resident[i]]
+            if holders:
+                rep = min(holders, key=lambda i: (r.load(i), i))
+                floor = r.load(r.least_loaded())
+                if r.load(rep) <= self.overload_factor * floor + self.slack:
+                    return rep
+        return super().choose(req)
+
+
 # --------------------------------------------------------------------------- #
 # router
 # --------------------------------------------------------------------------- #
@@ -229,6 +262,12 @@ class ClusterRouter:
         # adapter's requests across its homes weighted by each home's
         # capacity-normalised load
         self.replicated: Dict[int, set] = {}
+        # shared-prefix residency belief: prefix id -> last-touch seq,
+        # per replica (the replica engine's prefix cache keeps a prefix
+        # warm after its first carrier; routing the next carrier back
+        # turns that into a hit)
+        self.prefix_resident: List[Dict[int, int]] = [{} for _ in range(n)]
+        self.n_prefix_cold_routes = 0  # carrier routed to prefix-cold replica
         self.n_cold_routes = 0    # routed to a replica not holding adapter
         self.n_migrations = 0
         self.n_replications = 0
@@ -291,6 +330,9 @@ class ClusterRouter:
         self.alive[rep] = False
         orphaned = sorted(self.resident[rep])
         self.resident[rep] = {}
+        # its prefix cache dies with it (and restore() wipes it), so the
+        # belief is cleared rather than re-seeded on revive
+        self.prefix_resident[rep] = {}
         for a in orphaned:
             self._drop_home(a, rep)
         if not any(self.alive):
@@ -363,6 +405,11 @@ class ClusterRouter:
         return [i for i in range(self.n_replicas)
                 if self.alive[i] and adapter in self.resident[i]]
 
+    def prefix_homes(self, prefix_id: int) -> List[int]:
+        """Alive replicas believed to hold ``prefix_id`` warm."""
+        return [i for i in range(self.n_replicas)
+                if self.alive[i] and prefix_id in self.prefix_resident[i]]
+
     def warm(self, adapter: int, rep: int) -> None:
         """Seed a residency belief (plan-level initial placement) —
         neither a cold route nor a migration."""
@@ -406,6 +453,12 @@ class ClusterRouter:
         if req.adapter not in self.resident[rep]:
             self.n_cold_routes += 1
         self._admit_resident(req.adapter, rep)
+        if req.prefix_id is not None and req.prefix_len > 0:
+            pres = self.prefix_resident[rep]
+            if req.prefix_id not in pres:
+                self.n_prefix_cold_routes += 1
+            self._seq += 1
+            pres[req.prefix_id] = self._seq
         tokens = req.prompt_len + req.output_len
         self.assigned_tokens[rep] += tokens
         self.assigned_requests[rep] += 1
@@ -427,6 +480,7 @@ class ClusterRouter:
             "assigned_tokens": list(self.assigned_tokens),
             "loads": [self.load(i) for i in range(self.n_replicas)],
             "n_cold_routes": self.n_cold_routes,
+            "n_prefix_cold_routes": self.n_prefix_cold_routes,
             "n_migrations": self.n_migrations,
             "n_replications": self.n_replications,
             "n_unreplications": self.n_unreplications,
@@ -471,6 +525,11 @@ class ClusterMetrics:
     n_retries: int = 0
     n_failed_requests: int = 0
     n_load_faults: int = 0
+    # shared-prefix cache counters (0 with the cache off)
+    n_prefix_hits: int = 0
+    n_prefix_misses: int = 0
+    n_prefix_evictions: int = 0
+    prefix_tokens_saved: int = 0
 
     @property
     def starved(self) -> bool:
@@ -538,6 +597,10 @@ class ClusterMetrics:
             n_retries=sum(m.n_retries for m in per),
             n_failed_requests=sum(m.n_failed_requests for m in per),
             n_load_faults=sum(m.n_load_faults for m in per),
+            n_prefix_hits=sum(m.n_prefix_hits for m in per),
+            n_prefix_misses=sum(m.n_prefix_misses for m in per),
+            n_prefix_evictions=sum(m.n_prefix_evictions for m in per),
+            prefix_tokens_saved=sum(m.prefix_tokens_saved for m in per),
         )
 
 

@@ -33,6 +33,7 @@ from .adapter_cache import AdapterSlotCache
 from .executor import StepTiming
 from .kv_cache import PagedKVCache
 from .metrics import ServingMetrics, summarize
+from .prefix_cache import SharedPrefixCache
 from .request import Request
 from .scheduler import Scheduler
 
@@ -52,6 +53,10 @@ class EngineConfig:
     dynamic_slots: bool = False
     adapter_kv_tokens: Dict[int, int] = dataclasses.field(
         default_factory=dict)
+    # cross-adapter shared-prefix KV reuse (repro.serving.prefix_cache);
+    # off by default — requests with prefix_id=None behave identically
+    # either way, so False keeps every pre-existing run bitwise-pinned
+    prefix_cache: bool = False
 
 
 @dataclasses.dataclass
@@ -72,7 +77,9 @@ class ServingEngine:
             def reserve(uid: int, dry: bool = False) -> bool:
                 toks = cfg.adapter_kv_tokens.get(uid, 256)
                 if dry:
-                    return self.kv.can_allocate(toks)
+                    # uid-aware: a re-reserve for an adapter with block
+                    # slack must not be priced from an empty table
+                    return self.kv.can_allocate(toks, uid=-(uid + 1))
                 return self.kv.allocate(-(uid + 1), toks)
 
             def release(uid: int) -> None:
@@ -82,8 +89,11 @@ class ServingEngine:
                 0, dynamic=True, reserve=reserve, release=release)
         else:
             self.adapters = AdapterSlotCache(cfg.adapter_slots)
+        self.prefix: Optional[SharedPrefixCache] = \
+            SharedPrefixCache(self.kv) if cfg.prefix_cache else None
         self.scheduler = Scheduler(self.kv, self.adapters, cfg.max_running,
-                                   policy=cfg.sched_policy)
+                                   policy=cfg.sched_policy,
+                                   prefix=self.prefix)
         self.trace: List[StepTrace] = []
         # streaming hook: called as ``on_token(req, t)`` for every token
         # the step loop generates (the async gateway fans these out to
@@ -97,6 +107,8 @@ class ServingEngine:
     def reset_stream(self) -> None:
         """Start a fresh request stream (clock back to zero)."""
         self.scheduler.policy.reset()
+        if self.prefix is not None:
+            self.prefix.reset()
         self.clock = 0.0
         self.halted = False
         self._pending: List[Request] = []
@@ -210,8 +222,13 @@ class ServingEngine:
         duration = max(self.clock, 1e-9)
         arrived = [r for r in self._accepted if r.arrival <= duration]
         offered = sum(r.output_len for r in arrived)
+        pc = self.prefix
         return summarize(self._accepted, duration, offered, self._max_kv,
-                         self.adapters.load_count, self.n_load_faults)
+                         self.adapters.load_count, self.n_load_faults,
+                         n_prefix_hits=pc.n_hits if pc else 0,
+                         n_prefix_misses=pc.n_misses if pc else 0,
+                         n_prefix_evictions=pc.n_evictions if pc else 0,
+                         prefix_tokens_saved=pc.tokens_saved if pc else 0)
 
     # ------------------------------------------------------------------ #
     # fault-tolerance / rebalancing hooks
@@ -230,6 +247,8 @@ class ServingEngine:
         for req in list(self.scheduler.running):
             self.kv.free(req.uid)
             self.adapters.unpin(req.adapter)
+            if self.prefix is not None:
+                self.prefix.release(req.uid)
         self.scheduler.clear()
         self._pending = []
         self._next = 0
@@ -286,9 +305,12 @@ class ServingEngine:
         self.halted = False
         self.clock = max(now, self.clock)
         # the crash wiped GPU state: residency/pins restart from the
-        # snapshot without counting phantom evictions
+        # snapshot without counting phantom evictions; cached prefixes
+        # are gone too (counters survive — they are lifetime metrics)
         self.adapters.loaded.clear()
         self.adapters.pinned.clear()
+        if self.prefix is not None:
+            self.prefix.wipe()
         reloaded: List[int] = []
         for uid in snap.get("adapters", []):
             if uid in self.adapters.failing:
@@ -324,6 +346,8 @@ class ServingEngine:
             self.scheduler._remove_running(found)
             self.kv.free(uid)
             self.adapters.unpin(found.adapter)
+            if self.prefix is not None:
+                self.prefix.release(uid)
         if found is not None and forget:
             self._accepted = [r for r in self._accepted if r.uid != uid]
         return found

@@ -439,17 +439,23 @@ class AsyncGateway:
 
     async def submit(self, adapter: int, prompt_len: int, output_len: int,
                      stream: bool = False,
-                     arrival: Optional[float] = None
+                     arrival: Optional[float] = None,
+                     prefix_id: Optional[int] = None,
+                     prefix_len: int = 0
                      ) -> Union[Completion, CompletionStream, Rejected]:
         """Live-mode entry point (what the HTTP handlers call): stamp
         the request with the current virtual time, admit or reject, and
         either return the chunk stream immediately or await the
-        completed request."""
+        completed request.  ``prefix_id``/``prefix_len`` tag the leading
+        tokens of the prompt as a shared prefix for the engine's
+        cross-adapter prefix cache (no-op when the cache is off)."""
         req = Request(uid=self._next_uid(), adapter=adapter,
                       arrival=self._virtual_now() if arrival is None
                       else arrival,
                       prompt_len=max(int(prompt_len), 1),
-                      output_len=max(int(output_len), 1))
+                      output_len=max(int(output_len), 1),
+                      prefix_id=prefix_id,
+                      prefix_len=max(int(prefix_len), 0))
         res = self.offer(req, stream=stream)
         if isinstance(res, (Rejected, CompletionStream)):
             return res
@@ -714,6 +720,7 @@ class AsyncGateway:
     # ------------------------------------------------------------------ #
     def snapshot(self) -> dict:
         """Live counters (the ``/v1/metrics`` endpoint)."""
+        pc = getattr(self.engine, "prefix", None)
         return {
             "state": self.state,
             "clock_s": round(self.engine.clock, 3),
@@ -731,6 +738,10 @@ class AsyncGateway:
             "n_crashes": self.metrics.n_crashes,
             "n_recoveries": self.metrics.n_recoveries,
             "n_load_faults": getattr(self.engine, "n_load_faults", 0),
+            "n_prefix_hits": pc.n_hits if pc else 0,
+            "n_prefix_misses": pc.n_misses if pc else 0,
+            "n_prefix_evictions": pc.n_evictions if pc else 0,
+            "prefix_tokens_saved": pc.tokens_saved if pc else 0,
         }
 
 

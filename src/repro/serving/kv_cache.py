@@ -9,7 +9,7 @@ behaviour the paper analyses (Fig. 5's output-length effect).
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 
 class PagedKVCache:
@@ -24,8 +24,18 @@ class PagedKVCache:
     def blocks_needed(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size)
 
-    def can_allocate(self, n_tokens: int) -> bool:
-        return self.blocks_needed(n_tokens) <= self.free_blocks
+    def can_allocate(self, n_tokens: int,
+                     uid: Optional[int] = None) -> bool:
+        """Whether ``n_tokens`` more tokens fit.  With ``uid``, the check
+        mirrors ``allocate``'s delta charging: a requester with slack in
+        its partially-filled last block needs fewer (possibly zero) new
+        blocks, where the uid-blind form over-conservatively prices the
+        tokens from an empty table."""
+        if uid is None:
+            return self.blocks_needed(n_tokens) <= self.free_blocks
+        held_t = self.tokens.get(uid, 0)
+        need = self.blocks_needed(held_t + n_tokens) - self.table.get(uid, 0)
+        return need <= self.free_blocks
 
     def allocate(self, uid: int, n_tokens: int) -> bool:
         """Reserve blocks for `n_tokens` more tokens of request `uid`."""
@@ -41,6 +51,20 @@ class PagedKVCache:
     def free(self, uid: int) -> None:
         self.free_blocks += self.table.pop(uid, 0)
         self.tokens.pop(uid, None)
+
+    # ------------------------------------------------------------------ #
+    # raw block reservations (the shared-prefix cache's pool surface —
+    # cache-owned blocks sit beside request tables in the same pool, so
+    # they count toward used_fraction like any other KV)
+    # ------------------------------------------------------------------ #
+    def reserve_blocks(self, n_blocks: int) -> bool:
+        if n_blocks > self.free_blocks:
+            return False
+        self.free_blocks -= n_blocks
+        return True
+
+    def release_blocks(self, n_blocks: int) -> None:
+        self.free_blocks += n_blocks
 
     # ------------------------------------------------------------------ #
     @property

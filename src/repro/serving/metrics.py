@@ -39,6 +39,12 @@ class ServingMetrics:
     n_retries: int = 0         # re-submissions performed
     n_failed_requests: int = 0  # requests explicitly failed (retries spent)
     n_load_faults: int = 0     # adapter preloads/restores refused by faults
+    # shared-prefix cache counters (all 0 with the cache off — defaults
+    # keep pre-prefix-cache runs bitwise-identical)
+    n_prefix_hits: int = 0       # admissions that reused a cached prefix
+    n_prefix_misses: int = 0     # prefix-carrying admissions that did not
+    n_prefix_evictions: int = 0  # idle (zero-ref) entries reclaimed
+    prefix_tokens_saved: int = 0  # prefill tokens skipped via hits
     # raw per-request TTFT samples: ``ClusterMetrics.aggregate`` pools
     # these across replicas to compute *exact* cluster percentiles (a
     # finished-weighted mean of per-replica percentiles is biased
@@ -66,7 +72,10 @@ def ttft_percentiles(ttfts) -> Dict[str, float]:
 
 def summarize(reqs: List[Request], duration: float,
               offered_tokens: float, max_kv_used: float = 0.0,
-              n_loads: int = 0, n_load_faults: int = 0) -> ServingMetrics:
+              n_loads: int = 0, n_load_faults: int = 0,
+              n_prefix_hits: int = 0, n_prefix_misses: int = 0,
+              n_prefix_evictions: int = 0,
+              prefix_tokens_saved: int = 0) -> ServingMetrics:
     finished = [r for r in reqs if r.finished_at is not None]
     out_tokens = sum(r.generated for r in reqs)
     itls = [r.itl for r in finished if r.itl is not None]
@@ -95,6 +104,10 @@ def summarize(reqs: List[Request], duration: float,
         n_retries=sum(r.n_retries for r in reqs),
         n_failed_requests=sum(1 for r in reqs if r.failed_at is not None),
         n_load_faults=n_load_faults,
+        n_prefix_hits=n_prefix_hits,
+        n_prefix_misses=n_prefix_misses,
+        n_prefix_evictions=n_prefix_evictions,
+        prefix_tokens_saved=prefix_tokens_saved,
         ttft_samples=[float(t) for t in ttfts],
     )
 

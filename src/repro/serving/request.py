@@ -12,9 +12,11 @@ class Adapter:
     rate: float = 0.0                  # req/s (workload descriptor)
     location: str = "cpu"              # cpu | disk
 
-    def bytes(self, d_model: int, n_layers: int, n_targets: int = 2) -> int:
-        # A (d, r) + B (r, o~d) per target per layer, bf16
-        return 2 * 2 * self.rank * d_model * n_targets * n_layers
+    def bytes(self, d_model: int, n_layers: int, n_targets: int = 2,
+              dtype_bytes: int = 2) -> int:
+        # A (d, r) + B (r, o~d) per target per layer; ``dtype_bytes``
+        # defaults to bf16 (2) — int8 adapter banks pass 1
+        return dtype_bytes * 2 * self.rank * d_model * n_targets * n_layers
 
 
 @dataclasses.dataclass
@@ -24,6 +26,13 @@ class Request:
     arrival: float
     prompt_len: int
     output_len: int
+
+    # shared-prefix identity: the first min(prefix_len, prompt_len)
+    # prompt tokens are the shared system prompt named ``prefix_id``
+    # (typically the tenant/adapter uid).  None = no shared prefix —
+    # bitwise-identical to the pre-prefix-cache engine everywhere.
+    prefix_id: Optional[int] = None
+    prefix_len: int = 0
 
     # progress
     generated: int = 0

@@ -21,6 +21,7 @@ from .adapter_cache import AdapterSlotCache
 from .kv_cache import PagedKVCache
 from .policy import (SchedulingPolicy, SchedView, make_sched_policy,
                      overrides_victim)
+from .prefix_cache import SharedPrefixCache
 from .request import Request
 
 
@@ -30,6 +31,9 @@ class StepPlan:
     preempted: List[Request]
     cold_loads: List[int]            # adapter uids loaded from host this step
     running: List[Request]           # full running batch (incl. admitted)
+    # prompt tokens served from the shared-prefix cache this step: the
+    # Eq. (1) prefill term (and every executor's) skips them
+    prefill_covered: int = 0
 
     @property
     def unique_adapters(self) -> Set[int]:
@@ -37,7 +41,8 @@ class StepPlan:
 
     @property
     def prefill_tokens(self) -> int:
-        return sum(r.context_len for r in self.admitted)
+        return sum(r.context_len for r in self.admitted) \
+            - self.prefill_covered
 
 
 class _RequestView(SchedView):
@@ -64,9 +69,11 @@ class _RequestView(SchedView):
 class Scheduler:
     def __init__(self, kv: PagedKVCache, adapters: AdapterSlotCache,
                  max_running: int = 256,
-                 policy: Union[str, SchedulingPolicy] = "fcfs"):
+                 policy: Union[str, SchedulingPolicy] = "fcfs",
+                 prefix: Optional[SharedPrefixCache] = None):
         self.kv = kv
         self.adapters = adapters
+        self.prefix = prefix
         self.max_running = max_running
         self.policy = make_sched_policy(policy)
         self._view = _RequestView(adapters)
@@ -104,6 +111,8 @@ class Scheduler:
         self._remove_running(req)
         self.kv.free(req.uid)
         self.adapters.unpin(req.adapter)
+        if self.prefix is not None:
+            self.prefix.release(req.uid)
 
     def _preempt_one(self) -> Optional[Request]:
         """Evict one running request (recompute).  Default rule — the
@@ -119,6 +128,8 @@ class Scheduler:
         self._remove_running(victim)
         self.kv.free(victim.uid)
         self.adapters.unpin(victim.adapter)
+        if self.prefix is not None:
+            self.prefix.release(victim.uid)
         victim.n_preemptions += 1
         self.waiting.appendleft(victim)
         return victim
@@ -139,6 +150,10 @@ class Scheduler:
                 if self.adapters.dynamic and \
                         self.adapters.evict_idle_lru() is not None:
                     continue
+                # idle (zero-ref) shared prefixes go next — still cheaper
+                # than recomputing a live request
+                if self.prefix is not None and self.prefix.evict_idle_lru():
+                    continue
                 victim = self._preempt_one()
                 if victim is None:
                     break
@@ -156,6 +171,7 @@ class Scheduler:
         #    is never reordered, only the per-step attempt order is.
         just_preempted = {r.uid for r in preempted}
         admitted_uids: Set[int] = set()
+        covered_total = 0
         # no admission is possible when the batch is full — skip the
         # policy's ordering work entirely (mirrors the fast path's guard)
         candidates = self.waiting if self.waiting and \
@@ -170,15 +186,37 @@ class Scheduler:
             # dynamic (S-LoRA) mode may evict idle adapter weights from the
             # unified pool to make room; every eviction re-runs the full
             # eligibility check (the evicted adapter can be this request's)
+            pfx = self.prefix is not None and req.prefix_id is not None \
+                and min(req.prefix_len, req.prompt_len) > 0
+            covered = want_insert = 0
+            if pfx:
+                covered, want_insert = self.prefix.plan(
+                    req.prefix_id, req.prefix_len, req.prompt_len)
             verdict = "admit"
             while True:
                 need_slots = not self.adapters.is_loaded(req.adapter)
                 if need_slots and not self.adapters.can_load(req.adapter):
                     verdict = "skip"
                     break
-                if not self.kv.can_allocate(req.context_len + 1):
+                if covered or want_insert:
+                    fits = self.prefix.fit_blocks(
+                        covered, want_insert,
+                        req.context_len) <= self.kv.free_blocks
+                else:
+                    fits = self.kv.can_allocate(req.context_len + 1,
+                                                uid=req.uid)
+                if not fits:
                     if self.adapters.dynamic and \
                             self.adapters.evict_idle_lru() is not None:
+                        continue
+                    if self.prefix is not None and self.prefix.evict_idle_lru(
+                            exclude=req.prefix_id):
+                        continue
+                    if want_insert:
+                        # pool too tight to cache the prefix even after
+                        # evicting idle entries: serve uncached (a counted
+                        # miss, no insert)
+                        want_insert = 0
                         continue
                     verdict = "stop"
                 break
@@ -189,7 +227,12 @@ class Scheduler:
             if self.adapters.load(req.adapter, now):
                 cold_loads.append(req.adapter)
             self.adapters.pin(req.adapter)
-            self.kv.allocate(req.uid, req.context_len + 1)
+            if pfx:
+                self.prefix.commit(req.uid, req.prefix_id, covered,
+                                   want_insert)
+            self.kv.allocate(req.uid,
+                             req.context_len + 1 - covered - want_insert)
+            covered_total += covered
             req.admitted_at = now
             self._append_running(req)
             admitted.append(req)
@@ -203,7 +246,8 @@ class Scheduler:
         for req in self.running:
             self.adapters.touch(req.adapter, now)
         return StepPlan(admitted=admitted, preempted=preempted,
-                        cold_loads=cold_loads, running=list(self.running))
+                        cold_loads=cold_loads, running=list(self.running),
+                        prefill_covered=covered_total)
 
     # ------------------------------------------------------------------ #
     @property

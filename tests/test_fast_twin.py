@@ -25,7 +25,8 @@ from repro.serving import SCHED_POLICIES, ClusterRouter, FailureEvent
 EXACT_FIELDS = ("throughput", "ideal_throughput", "duration", "n_finished",
                 "n_preemptions", "n_loads", "max_kv_used", "ttft",
                 "ttft_p50", "ttft_p99", "n_starved_requests",
-                "starved_per_adapter")
+                "starved_per_adapter", "n_prefix_hits", "n_prefix_misses",
+                "n_prefix_evictions", "prefix_tokens_saved")
 
 
 def mk_est(kv_base: float = 120000.0, kv_slope: float = -60.0

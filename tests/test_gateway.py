@@ -283,6 +283,10 @@ def test_http_completions_and_metrics():
     metrics = _body(out["metrics"])
     assert metrics["n_admitted"] == 2
     assert metrics["n_rejected"] == 0
+    # prefix-cache counters are always exposed (zero with the cache off)
+    for key in ("n_prefix_hits", "n_prefix_misses", "n_prefix_evictions",
+                "prefix_tokens_saved"):
+        assert metrics[key] == 0
     assert _body(out["health"]) == {"status": "serving"}
     assert out["missing"].startswith("HTTP/1.1 404")
 

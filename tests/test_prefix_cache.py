@@ -1,0 +1,441 @@
+"""Cross-adapter shared-prefix KV cache: unit behaviour, block-pool
+invariants, engine<->twin bitwise equivalence with the cache on, the
+``prefix_share=0`` opt-out pin, prefix-affinity routing, the analytic
+hit-rate model, and the placement models' prefix-hit-rate feature.
+
+Also hosts the two regression satellites that ride this PR:
+
+* uid-aware ``PagedKVCache.can_allocate`` — the fragmentation case
+  where a requester's slack in its partially-filled last block made the
+  uid-blind check refuse an allocation ``allocate`` would accept;
+* twin replay of chaos-scarred traces — ``DigitalTwin`` full mode must
+  reset the reliability lifecycle (retries/timeouts/failure stamps) on
+  its deep copies, never inherit it from the caller's stream.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (DigitalTwin, FastTwin, Scenario, WorkloadSpec,
+                        assign_shared_prefixes, expected_prefix_hit_rate,
+                        generate_requests, label_scenarios,
+                        make_adapter_pool)
+from repro.core.dataset import FEATURE_NAMES
+from repro.core.estimators import FittedEstimators
+from repro.core.forest import RandomForest
+from repro.core.placement import train_cluster_placement_model
+from repro.core.workload import load_trace, replay_trace, save_trace
+from repro.serving import (ClusterRouter, PagedKVCache, SharedPrefixCache,
+                           make_replica_specs)
+from repro.serving.request import Adapter, Request
+
+EXACT_FIELDS = ("throughput", "ideal_throughput", "duration", "n_finished",
+                "n_preemptions", "n_loads", "max_kv_used", "ttft",
+                "ttft_p50", "ttft_p99", "n_starved_requests",
+                "starved_per_adapter", "n_prefix_hits", "n_prefix_misses",
+                "n_prefix_evictions", "prefix_tokens_saved")
+
+
+def mk_est(kv_base: float = 120000.0, kv_slope: float = -60.0
+           ) -> FittedEstimators:
+    return FittedEstimators(
+        sched=np.array([4e-4, 8e-6, 4e-6, 2.5e-5]),
+        model=np.array([2.4e-2, 2.2e-4, 6.5e-6]),
+        adapters=np.array([1.06, 0.004]),
+        load=np.array([8e-3, 1.1e-3]),
+        load_disk_mult=1.7,
+        memmax=np.array([kv_base, kv_slope]))
+
+
+def _cache(capacity_tokens=1024, block_size=16):
+    pool = PagedKVCache(capacity_tokens, block_size=block_size)
+    return SharedPrefixCache(pool), pool
+
+
+# --------------------------------------------------------------------- #
+# cache unit behaviour
+# --------------------------------------------------------------------- #
+
+def test_plan_miss_then_hit_and_clamp():
+    pc, _ = _cache()
+    # cold cache: a miss planning to insert the (clamped) prefix
+    assert pc.plan(7, 64, 200) == (0, 64)
+    # prefix longer than the prompt clamps to the prompt
+    assert pc.plan(7, 500, 120) == (0, 120)
+    # degenerate prefixes never touch the cache
+    assert pc.plan(7, 0, 200) == (0, 0)
+    assert pc.plan(7, 32, 0) == (0, 0)
+    pc.commit(holder=1, prefix_id=7, covered=0, insert_tokens=64)
+    # warm: covered = min(entry tokens, requested prefix, prompt)
+    assert pc.plan(7, 64, 200) == (64, 0)
+    assert pc.plan(7, 64, 40) == (40, 0)
+    # plan is pure — still exactly one insert recorded
+    assert pc.n_inserts == 1
+
+
+def test_refcount_lifecycle_and_block_invariant():
+    pc, pool = _cache(capacity_tokens=1024)
+    total = pool.total_blocks
+
+    def invariant():
+        held = sum(pool.table.values())
+        assert pool.free_blocks + held + pc.cached_blocks == total
+
+    # miss: inserter computes and holds one reference
+    cov, ins = pc.plan(3, 48, 100)
+    pc.commit(holder=10, prefix_id=3, covered=cov, insert_tokens=ins)
+    assert pool.allocate(10, 100 + 1 - ins)
+    entry = pc.entries[("base", 3)]
+    assert (entry.refs, entry.tokens) == (1, 48)
+    invariant()
+
+    # hit from a *different adapter's* request: shared reference
+    cov, ins = pc.plan(3, 48, 90)
+    assert (cov, ins) == (48, 0)
+    pc.commit(holder=11, prefix_id=3, covered=cov, insert_tokens=ins)
+    assert pool.allocate(11, 90 + 1 - cov)
+    assert entry.refs == 2
+    assert pc.n_hits == 1 and pc.tokens_saved == 48
+    invariant()
+
+    # releases drop refs but keep the entry warm (evictable at 0)
+    pc.release(10)
+    pool.free(10)
+    pc.release(11)
+    pool.free(11)
+    assert entry.refs == 0
+    assert ("base", 3) in pc.entries
+    invariant()
+    # double release of an unknown holder is a no-op
+    pc.release(99)
+    assert entry.refs == 0
+
+
+def test_eviction_lru_zero_ref_only_and_exclude():
+    pc, pool = _cache()
+    for pid, holder in ((1, 100), (2, 101), (3, 102)):
+        cov, ins = pc.plan(pid, 32, 64)
+        pc.commit(holder=holder, prefix_id=pid, covered=cov,
+                  insert_tokens=ins)
+    pc.release(101)           # pid 2 idle (oldest zero-ref)
+    pc.release(102)           # pid 3 idle
+    # live-ref entry (pid 1) is never evicted; LRU picks pid 2 first
+    assert pc.evict_idle_lru()
+    assert ("base", 2) not in pc.entries and ("base", 1) in pc.entries
+    # exclude protects the prefix an in-flight admission wants
+    assert not pc.evict_idle_lru(exclude=3) or ("base", 3) in pc.entries
+    pc.release(100)
+    # with everything idle, exclude=1 still lets pid 3 go
+    before = pc.n_evictions
+    assert pc.evict_idle_lru(exclude=1)
+    assert ("base", 1) in pc.entries
+    assert pc.n_evictions == before + 1
+
+
+def test_hit_after_evict_is_a_miss():
+    pc, pool = _cache()
+    cov, ins = pc.plan(5, 40, 80)
+    pc.commit(holder=1, prefix_id=5, covered=cov, insert_tokens=ins)
+    pc.release(1)
+    free_before = pool.free_blocks
+    assert pc.evict_idle_lru()
+    assert pool.free_blocks == free_before + pool.blocks_needed(40)
+    # the prefix is cold again: next plan is a fresh miss-with-insert
+    assert pc.plan(5, 40, 80) == (0, 40)
+
+
+def test_zero_capacity_pool():
+    pc, pool = _cache(capacity_tokens=0)
+    assert pool.total_blocks == 0
+    cov, ins = pc.plan(1, 16, 32)
+    assert (cov, ins) == (0, 16)
+    # the admission gate must see the insert cannot fit...
+    assert pc.fit_blocks(cov, ins, 32) > pool.free_blocks
+    # ...and nothing is idle to evict
+    assert not pc.evict_idle_lru()
+    # a downgraded (uncached) miss is still counted, allocates nothing
+    pc.commit(holder=1, prefix_id=1, covered=0, insert_tokens=0)
+    assert (pc.n_misses, pc.n_inserts, pc.cached_blocks) == (1, 0, 0)
+    # committing the insert anyway is a caller bug and says so
+    with pytest.raises(RuntimeError):
+        pc.commit(holder=2, prefix_id=1, covered=0, insert_tokens=16)
+
+
+def test_wipe_keeps_counters_reset_clears_them():
+    pc, pool = _cache()
+    cov, ins = pc.plan(1, 32, 64)
+    pc.commit(holder=1, prefix_id=1, covered=cov, insert_tokens=ins)
+    pc.commit(holder=2, prefix_id=1, covered=32, insert_tokens=0)
+    free_total = pool.total_blocks
+    pc.wipe()                 # crash recovery: entries gone, metrics stay
+    assert not pc.entries and not pc.holders
+    assert pool.free_blocks == free_total
+    assert (pc.n_hits, pc.n_misses, pc.n_inserts) == (1, 1, 1)
+    assert pc.hit_rate == pytest.approx(0.5)
+    pc.reset()                # fresh stream: metrics go too
+    assert (pc.n_hits, pc.n_misses, pc.tokens_saved) == (0, 0, 0)
+    assert pc.hit_rate == 0.0
+
+
+# --------------------------------------------------------------------- #
+# satellite: uid-aware can_allocate (fragmentation regression)
+# --------------------------------------------------------------------- #
+
+def test_can_allocate_uid_credits_partial_last_block():
+    kv = PagedKVCache(32, block_size=16)          # exactly 2 blocks
+    assert kv.allocate(1, 17)                     # 2 blocks, 15 slack
+    assert kv.free_blocks == 0
+    # uid-blind: prices 15 tokens from an empty table -> 1 block -> no
+    assert not kv.can_allocate(15)
+    # uid-aware: the requester's last block has the slack -> 0 blocks
+    assert kv.can_allocate(15, uid=1)
+    assert kv.allocate(1, 15)                     # and allocate agrees
+    assert kv.tokens[1] == 32 and kv.free_blocks == 0
+    # one token past the boundary needs a real block again
+    assert not kv.can_allocate(1, uid=1)
+    # unknown uid degrades to the uid-blind price
+    assert not kv.can_allocate(1, uid=999)
+
+
+# --------------------------------------------------------------------- #
+# engine <-> twin bitwise with the cache on; share=0 opt-out pin
+# --------------------------------------------------------------------- #
+
+def _prefix_spec(share, pool, horizon=40.0, seed=13, prefix_len=160):
+    return WorkloadSpec(adapters=pool, dataset="medium", horizon=horizon,
+                        seed=seed, prefix_share=share,
+                        prefix_len=prefix_len)
+
+
+def test_equivalence_cache_on_prefix_workload():
+    est = mk_est(kv_base=4000.0, kv_slope=-30.0)   # pressured pool
+    pool = make_adapter_pool(8, [8, 16], [0.5, 0.25])
+    spec = _prefix_spec(0.8, pool)
+    reqs = generate_requests(spec)
+    legacy = DigitalTwin(est, mode="full", prefix_cache=True) \
+        .simulate(spec, slots=3, requests=reqs).metrics
+    fast = FastTwin(est, mode="full", prefix_cache=True) \
+        .simulate(spec, slots=3, requests=reqs).metrics
+    assert legacy.n_prefix_hits > 0
+    assert legacy.prefix_tokens_saved > 0
+    for f in EXACT_FIELDS:
+        assert getattr(legacy, f) == getattr(fast, f), \
+            f"{f}: {getattr(legacy, f)} != {getattr(fast, f)}"
+    assert fast.itl == pytest.approx(legacy.itl, rel=1e-9, abs=1e-12)
+
+
+def test_share_zero_is_bitwise_free():
+    est = mk_est(kv_base=6000.0, kv_slope=-30.0)
+    pool = make_adapter_pool(6, [8, 16], [0.4, 0.2])
+    plain = WorkloadSpec(adapters=pool, dataset="medium", horizon=30.0,
+                         seed=4)
+    tagged = _prefix_spec(0.0, pool, horizon=30.0, seed=4)
+    # the carrier RNG is a separate stream: share=0 leaves the requests
+    # bitwise identical to a prefix-free spec
+    for a, b in zip(generate_requests(plain), generate_requests(tagged)):
+        assert (a.uid, a.adapter, a.arrival, a.prompt_len, a.output_len,
+                a.prefix_id, a.prefix_len) == \
+               (b.uid, b.adapter, b.arrival, b.prompt_len, b.output_len,
+                b.prefix_id, b.prefix_len)
+    on = DigitalTwin(est, mode="mean", prefix_cache=True) \
+        .simulate(tagged, slots=3).metrics
+    off = DigitalTwin(est, mode="mean", prefix_cache=False) \
+        .simulate(plain, slots=3).metrics
+    for f in EXACT_FIELDS:
+        assert getattr(on, f) == getattr(off, f), f
+    assert on.n_prefix_hits == 0 and on.n_prefix_misses == 0
+
+
+def test_assign_shared_prefixes_marks_carriers():
+    pool = make_adapter_pool(4, [8], [0.5])
+    spec = WorkloadSpec(adapters=pool, dataset="medium", horizon=30.0,
+                        seed=2)
+    base = generate_requests(spec)
+    reqs = assign_shared_prefixes(
+        [Request(uid=r.uid, adapter=r.adapter, arrival=r.arrival,
+                 prompt_len=r.prompt_len, output_len=r.output_len)
+         for r in base], share=0.6, prefix_len=100, seed=2)
+    carriers = [r for r in reqs if r.prefix_id is not None]
+    assert 0 < len(carriers) < len(reqs)
+    for r, b in zip(reqs, base):
+        if r.prefix_id is not None:
+            # one shared prompt per tenant, prompt grew by the prefix
+            assert r.prefix_id == r.adapter and r.prefix_len == 100
+            assert r.prompt_len == b.prompt_len + 100
+        else:
+            assert r.prompt_len == b.prompt_len and r.prefix_len == 0
+
+
+# --------------------------------------------------------------------- #
+# analytic hit-rate model
+# --------------------------------------------------------------------- #
+
+def test_expected_prefix_hit_rate_math():
+    pool = [Adapter(uid=0, rank=8, rate=0.5),
+            Adapter(uid=1, rank=8, rate=0.1),
+            Adapter(uid=2, rank=8, rate=0.0)]   # inactive: ignored
+    spec = WorkloadSpec(adapters=pool, dataset="medium", horizon=20.0,
+                        seed=0, prefix_share=0.5, prefix_len=100)
+    # per tenant: max(rate*horizon*share - 1, 0) expected hits
+    hits = max(0.5 * 20 * 0.5 - 1, 0) + max(0.1 * 20 * 0.5 - 1, 0)
+    total = 0.5 * 20 + 0.1 * 20
+    assert expected_prefix_hit_rate(spec) == pytest.approx(hits / total)
+    # degenerate prefixes model out to zero
+    for share, plen in ((0.0, 100), (0.5, 0)):
+        s = WorkloadSpec(adapters=pool, dataset="medium", horizon=20.0,
+                         seed=0, prefix_share=share, prefix_len=plen)
+        assert expected_prefix_hit_rate(s) == 0.0
+
+
+# --------------------------------------------------------------------- #
+# prefix-affinity routing
+# --------------------------------------------------------------------- #
+
+def _carrier(uid, adapter, prefix_id, arrival=0.0):
+    return Request(uid=uid, adapter=adapter, arrival=arrival,
+                   prompt_len=200, output_len=50, prefix_id=prefix_id,
+                   prefix_len=120)
+
+
+def test_prefix_affinity_routes_carriers_home():
+    router = ClusterRouter(make_replica_specs(3, 4, 100_000),
+                           policy="prefix-affinity")
+    first = router.route(_carrier(0, adapter=1, prefix_id=1))
+    assert router.n_prefix_cold_routes == 1
+    assert router.prefix_homes(1) == [first]
+    # a different tenant's carrier lands elsewhere (least-loaded)
+    other = router.route(_carrier(1, adapter=2, prefix_id=2))
+    assert other != first
+    # the next carriers of tenant 1 stick to the warm replica even as
+    # other traffic shifts the loads around
+    for i in range(3):
+        router.route(Request(uid=10 + i, adapter=5 + i, arrival=0.0,
+                             prompt_len=150, output_len=50))
+    assert router.route(_carrier(20, adapter=1, prefix_id=1)) == first
+    assert router.n_prefix_cold_routes == 2   # only the two first touches
+
+
+def test_prefix_affinity_falls_back_and_forgets_dead():
+    router = ClusterRouter(make_replica_specs(2, 4, 100_000),
+                           policy="prefix-affinity")
+    home = router.route(_carrier(0, adapter=3, prefix_id=3))
+    # prefix-free requests use plain adapter affinity
+    plain = Request(uid=1, adapter=3, arrival=0.0, prompt_len=100,
+                    output_len=50)
+    assert router.route(plain) == home
+    # a dead replica's prefix cache dies with it: belief cleared, the
+    # next carrier is a (counted) cold route on a survivor
+    cold_before = router.n_prefix_cold_routes
+    router.mark_dead(home)
+    assert router.prefix_homes(3) == []
+    rep = router.route(_carrier(2, adapter=3, prefix_id=3))
+    assert rep != home
+    assert router.n_prefix_cold_routes == cold_before + 1
+
+
+def test_router_summary_reports_prefix_cold_routes():
+    router = ClusterRouter(make_replica_specs(2, 4, 100_000),
+                           policy="prefix-affinity")
+    router.route(_carrier(0, adapter=0, prefix_id=0))
+    assert router.summary()["n_prefix_cold_routes"] == 1
+
+
+# --------------------------------------------------------------------- #
+# satellite: chaos-scarred trace replay resets reliability lifecycle
+# --------------------------------------------------------------------- #
+
+def test_twin_replay_resets_reliability_fields():
+    est = mk_est()
+    pool = make_adapter_pool(6, [8, 16], [0.3])
+    spec = WorkloadSpec(adapters=pool, dataset="medium", horizon=25.0,
+                        seed=6)
+    clean = generate_requests(spec)
+    scarred = generate_requests(spec)
+    for r in scarred:          # a chaos run's leftovers
+        r.n_retries, r.n_timeouts = 2, 1
+        r.failed_at, r.retry_at, r.disconnected_at = 1.0, 2.0, 3.0
+    m_clean = DigitalTwin(est, mode="full").simulate(
+        spec, slots=3, requests=clean).metrics
+    m_scar = DigitalTwin(est, mode="full").simulate(
+        spec, slots=3, requests=scarred).metrics
+    # the replay starts every lifecycle clean: bitwise-identical metrics
+    for f in EXACT_FIELDS + ("n_retries", "n_timeouts"):
+        assert getattr(m_clean, f) == getattr(m_scar, f), f
+    assert m_scar.n_retries == 0 and m_scar.n_timeouts == 0
+    # and the caller's scarred stream is untouched (deep copies)
+    assert all(r.n_retries == 2 and r.failed_at == 1.0 for r in scarred)
+
+
+# --------------------------------------------------------------------- #
+# trace persistence / replay carries prefix identity
+# --------------------------------------------------------------------- #
+
+def test_trace_roundtrip_preserves_prefix_fields(tmp_path):
+    pool = make_adapter_pool(4, [8], [0.4])
+    spec = WorkloadSpec(adapters=pool, dataset="medium", horizon=20.0,
+                        seed=3, prefix_share=0.7, prefix_len=80)
+    reqs = generate_requests(spec)
+    assert any(r.prefix_id is not None for r in reqs)
+    path = tmp_path / "trace.json"
+    save_trace(path, reqs)
+    loaded = load_trace(path)
+    replayed = list(replay_trace(reqs))
+    for a, b, c in zip(sorted(reqs, key=lambda r: (r.arrival, r.uid)),
+                       sorted(loaded, key=lambda r: (r.arrival, r.uid)),
+                       replayed):
+        for other in (b, c):
+            assert (a.uid, a.prefix_id, a.prefix_len, a.prompt_len) == \
+                   (other.uid, other.prefix_id, other.prefix_len,
+                    other.prompt_len)
+        assert c.generated == 0 and c.finished_at is None
+
+
+def test_load_trace_accepts_pre_prefix_format(tmp_path):
+    rows = [{"uid": 0, "adapter": 1, "arrival": 0.5,
+             "prompt_len": 100, "output_len": 20}]
+    path = tmp_path / "old.json"
+    path.write_text(json.dumps(rows))
+    (req,) = load_trace(path)
+    assert req.prefix_id is None and req.prefix_len == 0
+
+
+# --------------------------------------------------------------------- #
+# satellite: adapter bank dtype sizing
+# --------------------------------------------------------------------- #
+
+def test_adapter_bytes_dtype():
+    a = Adapter(uid=0, rank=16)
+    bf16 = a.bytes(d_model=4096, n_layers=32)
+    assert bf16 == 2 * 2 * 16 * 4096 * 2 * 32
+    assert a.bytes(d_model=4096, n_layers=32, dtype_bytes=1) == bf16 // 2
+
+
+# --------------------------------------------------------------------- #
+# placement models learn from the prefix-hit-rate feature
+# --------------------------------------------------------------------- #
+
+def _prefix_scenarios():
+    shares = (0.0, 0.05, 0.1, 0.15, 0.2, 0.7, 0.75, 0.8, 0.85, 0.9)
+    return [Scenario(rates=(0.08, 0.04, 0.02), ranks=(8, 16),
+                     dataset="medium", prefix_share=s, prefix_len=200)
+            for s in shares]
+
+
+def test_placement_model_ranks_prefix_hit_rate():
+    est = mk_est(kv_base=5000.0, kv_slope=-30.0)
+    xs, ys, _ = label_scenarios(est, _prefix_scenarios(), max_adapters=6,
+                                horizon=25.0, seed=2)
+    assert xs.shape[1] == len(FEATURE_NAMES)
+    rf = RandomForest(n_trees=5, max_depth=3, seed=0).fit(xs, ys)
+    imp = dict(zip(FEATURE_NAMES, rf.feature_importances().tolist()))
+    assert imp["prefix_hit_rate"] > 0.0
+
+
+def test_cluster_model_ranks_prefix_hit_rate():
+    est = mk_est(kv_base=5000.0, kv_slope=-30.0)
+    sc = _prefix_scenarios()
+    cm = train_cluster_placement_model(
+        est, sc[:4] + sc[-4:], max_adapters=6, replica_counts=(1, 2),
+        horizon=12.0, seed=2, holdout=0.0)
+    assert cm.importances()["prefix_hit_rate"] > 0.0

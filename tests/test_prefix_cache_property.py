@@ -1,0 +1,73 @@
+"""Property-based shared-prefix cache harness (optional dependency).
+
+Hypothesis drives random interleavings of admission planning, commits,
+request KV allocation, releases and idle eviction against a real
+``PagedKVCache`` pool, asserting the invariants the scheduler relies on:
+
+* **block conservation** — ``free + request-held + cached == total``
+  after every operation (the cache can never leak or double-count pool
+  blocks);
+* **plan exclusivity** — at most one of ``(covered, insert_tokens)`` is
+  nonzero and coverage never exceeds the clamped prefix;
+* **bounded hit rate** — ``hit_rate`` stays in ``[0, 1]``;
+* **clean teardown** — releasing every holder and draining the idle LRU
+  returns the pool to fully free.
+
+The always-on unit and edge coverage lives in tests/test_prefix_cache.py;
+this module skips entirely when hypothesis is absent.
+"""
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serving import PagedKVCache, SharedPrefixCache  # noqa: E402
+
+OPS = st.lists(
+    st.tuples(st.integers(0, 3),          # prefix id (few -> collisions)
+              st.integers(1, 48),         # prefix_len
+              st.integers(1, 80),         # prompt_len
+              st.booleans()),             # release oldest holder after
+    min_size=1, max_size=60)
+
+
+@settings(max_examples=120, deadline=None)
+@given(ops=OPS, capacity_blocks=st.integers(0, 24))
+def test_block_conservation_under_random_interleavings(ops, capacity_blocks):
+    pool = PagedKVCache(capacity_blocks * 16, block_size=16)
+    pc = SharedPrefixCache(pool)
+    holders = []
+    for uid, (pid, plen, prompt, do_release) in enumerate(ops):
+        cov, ins = pc.plan(pid, plen, prompt)
+        assert (cov > 0) + (ins > 0) <= 1
+        assert cov <= min(plen, prompt)
+        ctx = prompt
+        if pc.fit_blocks(cov, ins, ctx) > pool.free_blocks:
+            # the scheduler's pressure ladder: evict an idle prefix,
+            # else serve a miss uncached (downgrade the insert)
+            if not pc.evict_idle_lru(exclude=pid if cov else None):
+                ins = 0
+        if pc.fit_blocks(cov, ins, ctx) <= pool.free_blocks:
+            pc.commit(holder=uid, prefix_id=pid, covered=cov,
+                      insert_tokens=ins)
+            if pool.allocate(uid, ctx + 1 - cov - ins):
+                holders.append(uid)
+            else:
+                pc.release(uid)
+        if do_release and holders:
+            h = holders.pop(0)
+            pc.release(h)
+            pool.free(h)
+        held = sum(pool.table.values())
+        assert pool.free_blocks + held + pc.cached_blocks \
+            == pool.total_blocks
+        assert 0.0 <= pc.hit_rate <= 1.0
+    # full teardown returns every block to the pool
+    for h in holders:
+        pc.release(h)
+        pool.free(h)
+    while pc.evict_idle_lru():
+        pass
+    assert not pc.entries
+    assert pool.free_blocks == pool.total_blocks - sum(pool.table.values())
