@@ -1,0 +1,25 @@
+"""repro-lint: AST-based repo-invariant checker (``python -m
+repro.analysis``).
+
+Complements ruff: ruff checks each file in isolation, repro-lint checks
+*contracts between files* — the twin-equivalence field set, determinism
+of simulation paths, engine→cluster→CLI config threading, fast-twin and
+kernel-oracle mirror coverage, async safety in the gateway, and trace
+round-trip completeness.  See ``docs/analysis.md`` for the rule
+catalog.
+"""
+from .core import (DEFAULT_BASELINE, REPO_ROOT, RULES, Finding, Repo,
+                   Report, load_baseline, run_repo, run_rules,
+                   save_baseline)
+
+# importing the rule modules populates the RULES registry
+from . import rules_determinism  # noqa: F401
+from . import rules_twin         # noqa: F401
+from . import rules_config      # noqa: F401
+from . import rules_mirror      # noqa: F401
+from . import rules_async       # noqa: F401
+from . import rules_trace       # noqa: F401
+
+__all__ = ["DEFAULT_BASELINE", "REPO_ROOT", "RULES", "Finding", "Repo",
+           "Report", "load_baseline", "run_repo", "run_rules",
+           "save_baseline"]

@@ -1,0 +1,84 @@
+"""CLI for repro-lint (``python -m repro.analysis`` / ``repro-lint``).
+
+Exit status: 0 when no *new* findings (inline-suppressed and baselined
+ones are reported but do not fail), 1 otherwise — same contract as
+``tools/check_docs.py``, so CI wires it as one more gate.
+"""
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+from typing import Dict, Optional
+
+from . import core
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="AST-based repo-invariant checker for the twin-"
+                    "equivalence, determinism and config-threading "
+                    "contracts.")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root to lint (default: this checkout)")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help=f"baseline file (default: "
+                         f"{core.DEFAULT_BASELINE})")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline (report everything as new)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline from current findings "
+                         "and exit 0 (reasons become TODO stubs)")
+    ap.add_argument("--rules", default="",
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress per-finding output, print summary only")
+    return ap
+
+
+def main(argv=None, overrides: Optional[Dict[str, str]] = None) -> int:
+    """``overrides`` maps repo-relative paths to replacement file text —
+    the hook ``tests/test_analysis.py`` uses to drive negative fixtures
+    through the real CLI path."""
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        for rid in sorted(core.RULES):
+            print(f"{rid:26s} {core.RULES[rid].synopsis}")
+        return 0
+
+    repo = core.Repo(args.root, overrides)
+    baseline_path = args.baseline or repo.root / core.DEFAULT_BASELINE
+    rules = [r.strip() for r in args.rules.split(",") if r.strip()] or None
+    baseline = [] if (args.no_baseline or args.write_baseline) \
+        else core.load_baseline(baseline_path)
+    report = core.run_rules(repo, rules, baseline)
+
+    if args.write_baseline:
+        core.save_baseline(baseline_path, report.new)
+        print(f"wrote {len(report.new)} baseline entr"
+              f"{'y' if len(report.new) == 1 else 'ies'} to "
+              f"{baseline_path} — fill in the reason fields")
+        return 0
+
+    if not args.quiet:
+        for f in report.new:
+            print(f.render())
+        for f in report.baselined:
+            print(f"{f.render()}  [baselined]")
+    # baseline delta: what the committed exemptions absorbed this run,
+    # and which entries no longer match anything (candidates to delete)
+    print(f"repro-lint: {len(report.new)} new, "
+          f"{len(report.baselined)} baselined, "
+          f"{len(report.suppressed)} suppressed inline"
+          + (f", {len(report.stale_baseline)} stale baseline entr"
+             f"{'y' if len(report.stale_baseline) == 1 else 'ies'}"
+             if report.stale_baseline else ""))
+    for key in report.stale_baseline:
+        print(f"  stale baseline entry (delete it): {key}")
+    return 1 if report.new else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,292 @@
+"""repro-lint core: findings, rule registry, suppressions, baseline.
+
+The linter checks *repo invariants* — contracts between files that ruff
+cannot see (twin-equivalence field sets, determinism of sim paths,
+config threading engine→cluster→CLI).  It mirrors the structure of the
+``tools/check_docs.py`` gate: small check functions that return plain
+findings, a ``main`` that prints them and exits non-zero.
+
+Three escape hatches, in increasing ceremony:
+
+* inline ``# repro-lint: ignore[rule-id]`` on the flagged line (or the
+  line above) suppresses one finding at its source;
+* the committed baseline file (``tools/repro_lint_baseline.json``)
+  records known, justified exemptions by stable key — findings matching
+  a baseline entry are reported but do not fail the run;
+* ``--rules`` narrows a run to a comma-separated subset while
+  iterating locally.
+
+Rules operate on a :class:`Repo` view that can overlay in-memory file
+contents (``overrides``), which is how ``tests/test_analysis.py`` feeds
+negative fixtures through the real rule code without touching disk.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import json
+import re
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+# src/repro/analysis/core.py -> repo root is three levels above src/
+REPO_ROOT = Path(__file__).resolve().parents[3]
+DEFAULT_BASELINE = "tools/repro_lint_baseline.json"
+
+_SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*ignore\[([\w\-*,\s]*)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a file:line.
+
+    ``key`` is the line-number-independent identity used for baseline
+    matching (so a baseline survives unrelated edits above the finding);
+    it defaults to the message when a rule does not provide one.
+    """
+    rule: str
+    path: str        # repo-relative, posix separators
+    line: int
+    message: str
+    key: str = ""
+
+    @property
+    def baseline_key(self) -> str:
+        return f"{self.rule}::{self.path}::{self.key or self.message}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass
+class RuleInfo:
+    rule_id: str
+    synopsis: str
+    func: Callable[["Repo"], List[Finding]]
+
+
+RULES: Dict[str, RuleInfo] = {}
+
+
+def rule(rule_id: str, synopsis: str):
+    """Register ``func(repo) -> List[Finding]`` under ``rule_id``."""
+    def deco(func):
+        if rule_id in RULES:
+            raise ValueError(f"duplicate rule id {rule_id!r}")
+        RULES[rule_id] = RuleInfo(rule_id, synopsis, func)
+        return func
+    return deco
+
+
+class Repo:
+    """Parsed-file view of the repository with optional text overlays."""
+
+    def __init__(self, root: Optional[Path] = None,
+                 overrides: Optional[Dict[str, str]] = None):
+        self.root = Path(root) if root is not None else REPO_ROOT
+        self.overrides = dict(overrides or {})
+        self._text: Dict[str, str] = {}
+        self._tree: Dict[str, ast.Module] = {}
+
+    def exists(self, rel: str) -> bool:
+        return rel in self.overrides or (self.root / rel).is_file()
+
+    def text(self, rel: str) -> str:
+        if rel not in self._text:
+            if rel in self.overrides:
+                self._text[rel] = self.overrides[rel]
+            else:
+                self._text[rel] = (self.root / rel).read_text()
+        return self._text[rel]
+
+    def tree(self, rel: str) -> ast.Module:
+        if rel not in self._tree:
+            self._tree[rel] = ast.parse(self.text(rel), filename=rel)
+        return self._tree[rel]
+
+    def files(self, *patterns: str) -> List[str]:
+        """Repo-relative .py paths matching any glob pattern, merged
+        with override-only virtual paths (so test fixtures can inject
+        files that do not exist on disk)."""
+        out = set()
+        for pat in patterns:
+            for p in self.root.glob(pat):
+                if p.is_file():
+                    out.add(p.relative_to(self.root).as_posix())
+            for rel in self.overrides:
+                if fnmatch.fnmatch(rel, pat):
+                    out.add(rel)
+        return sorted(out)
+
+
+# --------------------------------------------------------------------------- #
+# shared AST helpers used by the rule modules
+# --------------------------------------------------------------------------- #
+
+def dotted_name(node: ast.AST) -> str:
+    """``a.b.c`` for Name/Attribute chains, '' for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def find_class(tree: ast.Module, name: str) -> Optional[ast.ClassDef]:
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return node
+    return None
+
+
+def find_def(body: Iterable[ast.stmt], name: str):
+    for node in body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name == name:
+            return node
+    return None
+
+
+def dataclass_fields(cls: ast.ClassDef) -> List[Tuple[str, int]]:
+    """(name, lineno) of annotated assignments in a dataclass body."""
+    out = []
+    for node in cls.body:
+        if isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                          ast.Name):
+            out.append((node.target.id, node.lineno))
+    return out
+
+
+def tuple_assign(tree: ast.Module, name: str
+                 ) -> Optional[Tuple[List[str], int]]:
+    """String elements of a module-level ``NAME = ("a", "b", ...)``."""
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id == name \
+                and isinstance(node.value, (ast.Tuple, ast.List)):
+            elems = [e.value for e in node.value.elts
+                     if isinstance(e, ast.Constant) and isinstance(e.value,
+                                                                   str)]
+            return elems, node.lineno
+    return None
+
+
+def str_dict_keys(node: ast.AST) -> Dict[str, int]:
+    """All string dict-literal keys anywhere under ``node`` -> lineno."""
+    out: Dict[str, int] = {}
+    for n in ast.walk(node):
+        if isinstance(n, ast.Dict):
+            for k in n.keys:
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    out.setdefault(k.value, k.lineno)
+    return out
+
+
+def call_kwargs(node: ast.AST, func_names: Sequence[str]) -> Dict[str, int]:
+    """Keyword names of calls to any of ``func_names`` under ``node``."""
+    out: Dict[str, int] = {}
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call) and dotted_name(n.func) in func_names:
+            for kw in n.keywords:
+                if kw.arg:
+                    out.setdefault(kw.arg, n.lineno)
+    return out
+
+
+def arg_names(fn) -> List[str]:
+    a = fn.args
+    names = [x.arg for x in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+# --------------------------------------------------------------------------- #
+# runner
+# --------------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class Report:
+    new: List[Finding]
+    suppressed: List[Finding]
+    baselined: List[Finding]
+    stale_baseline: List[str]    # baseline keys matching nothing
+
+
+def _suppressed_ids(repo: Repo, f: Finding) -> List[str]:
+    try:
+        lines = repo.text(f.path).splitlines()
+    except (OSError, KeyError):
+        return []
+    ids: List[str] = []
+    for ln in (f.line, f.line - 1):
+        if 1 <= ln <= len(lines):
+            m = _SUPPRESS_RE.search(lines[ln - 1])
+            if m:
+                ids += [s.strip() for s in m.group(1).split(",") if s.strip()]
+    return ids
+
+
+def load_baseline(path: Path) -> List[dict]:
+    if not path.is_file():
+        return []
+    data = json.loads(path.read_text())
+    return list(data.get("suppressions", []))
+
+
+def save_baseline(path: Path, findings: Sequence[Finding]) -> None:
+    entries = [{"rule": f.rule, "path": f.path,
+                "key": f.key or f.message,
+                "reason": "TODO: justify this exemption"}
+               for f in sorted(findings, key=lambda f: f.baseline_key)]
+    path.write_text(json.dumps(
+        {"version": 1, "suppressions": entries}, indent=2) + "\n")
+
+
+def run_rules(repo: Repo, rules: Optional[Sequence[str]] = None,
+              baseline: Optional[Sequence[dict]] = None) -> Report:
+    ids = list(rules) if rules else sorted(RULES)
+    unknown = [r for r in ids if r not in RULES]
+    if unknown:
+        raise KeyError(f"unknown rule(s): {', '.join(unknown)}")
+    findings: List[Finding] = []
+    for rid in ids:
+        findings.extend(RULES[rid].func(repo))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+
+    new: List[Finding] = []
+    suppressed: List[Finding] = []
+    baselined: List[Finding] = []
+    base_keys = {f"{e['rule']}::{e['path']}::{e['key']}"
+                 for e in (baseline or [])}
+    hit_keys = set()
+    for f in findings:
+        ids_here = _suppressed_ids(repo, f)
+        if f.rule in ids_here or "*" in ids_here:
+            suppressed.append(f)
+        elif f.baseline_key in base_keys:
+            baselined.append(f)
+            hit_keys.add(f.baseline_key)
+        else:
+            new.append(f)
+    stale = sorted(base_keys - hit_keys)
+    return Report(new=new, suppressed=suppressed, baselined=baselined,
+                  stale_baseline=stale)
+
+
+def run_repo(root: Optional[Path] = None,
+             overrides: Optional[Dict[str, str]] = None,
+             rules: Optional[Sequence[str]] = None,
+             baseline_path: Optional[Path] = None) -> Report:
+    """Lint the repo (or an overlaid view of it) against the baseline."""
+    repo = Repo(root, overrides)
+    if baseline_path is None:
+        baseline_path = repo.root / DEFAULT_BASELINE
+    return run_rules(repo, rules, load_baseline(Path(baseline_path)))

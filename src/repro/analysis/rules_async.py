@@ -1,0 +1,55 @@
+"""Async-safety rule: no blocking calls inside ``async def`` bodies in
+the serving layer.
+
+The gateway multiplexes every client stream on one event loop; a single
+``time.sleep`` or synchronous socket/file call inside a coroutine
+stalls *all* streams (and, under the virtual clock, deadlocks the
+driven-clock tests).  Blocking work belongs in an executor thread or
+behind ``asyncio.to_thread``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from .core import Finding, Repo, dotted_name, rule
+
+SCOPES = ("src/repro/serving/*.py",)
+
+BLOCKING_CALLS = {"time.sleep", "os.system", "input",
+                  "urllib.request.urlopen"}
+BLOCKING_PREFIXES = ("socket.", "subprocess.", "requests.")
+BLOCKING_METHODS = {"read_text", "write_text", "read_bytes",
+                    "write_bytes"}
+
+
+@rule("async-blocking-call",
+      "no blocking calls (time.sleep, sync socket/file IO) inside "
+      "async def bodies in the serving layer")
+def check_async_blocking(repo: Repo) -> List[Finding]:
+    findings: List[Finding] = []
+    for rel in repo.files(*SCOPES):
+        tree = repo.tree(rel)
+        for fn in ast.walk(tree):
+            if not isinstance(fn, ast.AsyncFunctionDef):
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func)
+                method = (node.func.attr
+                          if isinstance(node.func, ast.Attribute) else "")
+                blocking = (name in BLOCKING_CALLS
+                            or name == "open"
+                            or name.startswith(BLOCKING_PREFIXES)
+                            or method in BLOCKING_METHODS)
+                if blocking:
+                    what = name or method
+                    findings.append(Finding(
+                        rule="async-blocking-call", path=rel,
+                        line=node.lineno,
+                        message=f"blocking call {what}() inside async "
+                                f"def {fn.name} — stalls the event loop; "
+                                "use asyncio primitives or to_thread",
+                        key=f"{what}@{fn.name}"))
+    return findings

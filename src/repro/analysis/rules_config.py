@@ -1,0 +1,134 @@
+"""Config-threading rules: every engine knob reaches the cluster spec
+and the command line.
+
+PRs that add an ``EngineConfig`` field but forget to thread it through
+``ReplicaSpec`` / ``make_replica_specs`` / a launcher ``--flag`` create
+knobs that exist but cannot be set — the drift class these rules catch.
+Deliberate single-engine-only knobs live in the documented
+``NON_REPLICA_FIELDS`` tuple in ``cluster.py``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from .core import (Finding, Repo, arg_names, call_kwargs,
+                   dataclass_fields, find_class, find_def, rule,
+                   tuple_assign)
+
+ENGINE_PATH = "src/repro/serving/engine.py"
+CLUSTER_PATH = "src/repro/serving/cluster.py"
+LAUNCH_GLOB = "src/repro/launch/*.py"
+
+# engine field -> accepted CLI spellings (beyond the mechanical
+# ``--field-name`` translation)
+FLAG_ALIASES: Dict[str, tuple] = {
+    "kv_capacity_tokens": ("--kv-tokens",),
+    "adapter_slots": ("--slots",),
+}
+
+
+def _engine_fields(repo: Repo):
+    cls = find_class(repo.tree(ENGINE_PATH), "EngineConfig")
+    return dataclass_fields(cls) if cls is not None else None
+
+
+def _excluded(repo: Repo) -> Set[str]:
+    got = tuple_assign(repo.tree(CLUSTER_PATH), "NON_REPLICA_FIELDS")
+    return set(got[0]) if got else set()
+
+
+@rule("config-replica-threading",
+      "every EngineConfig field (minus NON_REPLICA_FIELDS) appears in "
+      "ReplicaSpec, make_replica_specs and ReplicaSpec.engine_config")
+def check_replica_threading(repo: Repo) -> List[Finding]:
+    fields = _engine_fields(repo)
+    if fields is None:
+        return [Finding("config-replica-threading", ENGINE_PATH, 1,
+                        "EngineConfig dataclass not found",
+                        key="missing-engineconfig")]
+    findings: List[Finding] = []
+    tree = repo.tree(CLUSTER_PATH)
+    spec = find_class(tree, "ReplicaSpec")
+    maker = find_def(tree.body, "make_replica_specs")
+    if spec is None or maker is None:
+        return [Finding("config-replica-threading", CLUSTER_PATH, 1,
+                        "ReplicaSpec / make_replica_specs not found",
+                        key="missing-replicaspec")]
+    spec_fields = {n for n, _ in dataclass_fields(spec)}
+    maker_args = set(arg_names(maker))
+    eng_cfg = find_def(spec.body, "engine_config")
+    cfg_kwargs = set(call_kwargs(eng_cfg, ("EngineConfig",))) \
+        if eng_cfg is not None else set()
+    excluded = _excluded(repo)
+    for fname, _lineno in fields:
+        if fname in excluded:
+            continue
+        if fname not in spec_fields:
+            findings.append(Finding(
+                "config-replica-threading", CLUSTER_PATH, spec.lineno,
+                f"EngineConfig.{fname} has no ReplicaSpec field (add it "
+                "or list it in NON_REPLICA_FIELDS with a justification)",
+                key=f"spec-{fname}"))
+            continue
+        if fname not in maker_args:
+            findings.append(Finding(
+                "config-replica-threading", CLUSTER_PATH, maker.lineno,
+                f"make_replica_specs cannot set ReplicaSpec.{fname} — "
+                "callers are stuck with the default",
+                key=f"maker-{fname}"))
+        if fname not in cfg_kwargs:
+            findings.append(Finding(
+                "config-replica-threading", CLUSTER_PATH,
+                eng_cfg.lineno if eng_cfg else spec.lineno,
+                f"ReplicaSpec.engine_config never forwards {fname} to "
+                "EngineConfig — the spec value is ignored",
+                key=f"forward-{fname}"))
+    return findings
+
+
+def _parser_flags(repo: Repo) -> Set[str]:
+    flags: Set[str] = set()
+    for rel in repo.files(LAUNCH_GLOB):
+        tree = repo.tree(rel)
+        bp = None
+        for node in tree.body:
+            if isinstance(node, ast.FunctionDef) \
+                    and node.name == "build_parser":
+                bp = node
+                break
+        if bp is None:
+            continue
+        for node in ast.walk(bp):
+            if isinstance(node, ast.Call) and isinstance(
+                    node.func, ast.Attribute) \
+                    and node.func.attr == "add_argument":
+                for a in node.args:
+                    if isinstance(a, ast.Constant) and isinstance(
+                            a.value, str) and a.value.startswith("--"):
+                        flags.add(a.value)
+    return flags
+
+
+@rule("config-cli-threading",
+      "every EngineConfig field (minus NON_REPLICA_FIELDS) is settable "
+      "via a --flag in at least one launcher build_parser")
+def check_cli_threading(repo: Repo) -> List[Finding]:
+    fields = _engine_fields(repo)
+    if fields is None:
+        return []
+    flags = _parser_flags(repo)
+    excluded = _excluded(repo)
+    findings: List[Finding] = []
+    for fname, lineno in fields:
+        if fname in excluded:
+            continue
+        accepted = FLAG_ALIASES.get(fname, ()) \
+            + ("--" + fname.replace("_", "-"),)
+        if not any(f in flags for f in accepted):
+            findings.append(Finding(
+                "config-cli-threading", ENGINE_PATH, lineno,
+                f"EngineConfig.{fname} has no launcher flag (expected "
+                f"one of {', '.join(accepted)} in some build_parser)",
+                key=f"flag-{fname}"))
+    return findings

@@ -1,0 +1,143 @@
+"""Determinism rules: simulation paths must be wall-clock-free and
+seed-deterministic.
+
+The twin-fidelity claim (object engine == SoA twin, bitwise) and every
+replay/snapshot test in this repo rest on runs being pure functions of
+(workload seed, config).  A single ``time.time()`` or module-global
+``np.random`` draw on a sim path breaks that silently — results still
+*look* plausible, they just stop being reproducible.
+
+``time.perf_counter`` is special-cased: ``src/repro/core`` twins are
+allowed to time their own wall cost (the ``sim_wall_time`` metadata the
+speedup tables report) because that reading never feeds back into the
+virtual clock.  In ``src/repro/serving`` and ``src/repro/kernels`` it
+is forbidden too — those layers run entirely on the virtual clock; the
+one legitimate exception (``JaxExecutor`` measuring the *real* model it
+wraps) is carried in the committed baseline.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List
+
+from .core import Finding, Repo, dotted_name, rule
+
+SIM_SCOPES = ("src/repro/core/*.py", "src/repro/serving/*.py",
+              "src/repro/kernels/*.py")
+# layers where even perf_counter is off-limits (pure virtual clock)
+VIRTUAL_CLOCK_PREFIXES = ("src/repro/serving/", "src/repro/kernels/")
+
+WALL_CLOCK = {"time.time", "time.time_ns", "time.monotonic",
+              "time.monotonic_ns", "time.localtime", "time.gmtime"}
+WALL_CLOCK_SUFFIXES = ("datetime.now", "datetime.today",
+                       "datetime.utcnow", "date.today")
+PERF_COUNTER = {"time.perf_counter", "time.perf_counter_ns"}
+
+# module-global numpy RNG entry points (stateful, seed-order-fragile)
+NP_GLOBAL_RNG = {"seed", "random", "rand", "randn", "randint", "choice",
+                 "shuffle", "permutation", "normal", "uniform",
+                 "exponential", "poisson", "standard_normal"}
+
+
+def _enclosing_map(tree: ast.Module) -> Dict[int, str]:
+    """lineno -> dotted def/class qualname, for stable finding keys."""
+    out: Dict[int, str] = {}
+
+    def visit(node, stack):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                visit(child, stack + [child.name])
+            else:
+                visit(child, stack)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            qual = ".".join(stack)
+            lo = node.lineno
+            hi = max((n.lineno for n in ast.walk(node)
+                      if hasattr(n, "lineno")), default=lo)
+            for ln in range(lo, hi + 1):
+                out.setdefault(ln, qual)
+    visit(tree, [])
+    return out
+
+
+def _imports_module(tree: ast.Module, name: str) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            if any(a.name == name for a in node.names):
+                return True
+    return False
+
+
+def _imports_from(tree: ast.Module, module: str, name: str) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            if node.module == module and any(a.name == name
+                                             for a in node.names):
+                return True
+    return False
+
+
+@rule("determinism-wallclock",
+      "no wall-clock reads (time.time / datetime.now / ...) on sim paths")
+def check_wallclock(repo: Repo) -> List[Finding]:
+    findings: List[Finding] = []
+    for rel in repo.files(*SIM_SCOPES):
+        tree = repo.tree(rel)
+        enclosing = _enclosing_map(tree)
+        virtual = rel.startswith(VIRTUAL_CLOCK_PREFIXES)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            bad = (name in WALL_CLOCK
+                   or name.endswith(WALL_CLOCK_SUFFIXES)
+                   or (virtual and name in PERF_COUNTER))
+            if bad:
+                where = enclosing.get(node.lineno, "<module>")
+                findings.append(Finding(
+                    rule="determinism-wallclock", path=rel,
+                    line=node.lineno,
+                    message=f"wall-clock call {name}() in {where} — "
+                            "sim paths must run on the virtual clock",
+                    key=f"{name}@{where}"))
+    return findings
+
+
+@rule("determinism-rng",
+      "no global/unseeded RNGs (random.*, np.random.*, default_rng()) "
+      "on sim paths")
+def check_rng(repo: Repo) -> List[Finding]:
+    findings: List[Finding] = []
+    for rel in repo.files(*SIM_SCOPES):
+        tree = repo.tree(rel)
+        enclosing = _enclosing_map(tree)
+        has_random = _imports_module(tree, "random")
+        bare_default_rng = (
+            _imports_from(tree, "numpy.random", "default_rng"))
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            where = enclosing.get(node.lineno, "<module>")
+            msg = None
+            if has_random and name.startswith("random."):
+                msg = (f"stdlib global RNG {name}() — use a seeded "
+                       "np.random.default_rng instead")
+            elif name.startswith(("np.random.", "numpy.random.")):
+                leaf = name.rsplit(".", 1)[1]
+                if leaf in NP_GLOBAL_RNG:
+                    msg = (f"module-global numpy RNG {name}() — draw "
+                           "from a seeded Generator instead")
+                elif leaf == "default_rng" and not (node.args
+                                                    or node.keywords):
+                    msg = f"unseeded {name}() — pass an explicit seed"
+            elif (name == "default_rng" and bare_default_rng
+                    and not (node.args or node.keywords)):
+                msg = "unseeded default_rng() — pass an explicit seed"
+            if msg:
+                findings.append(Finding(
+                    rule="determinism-rng", path=rel, line=node.lineno,
+                    message=f"{msg} (in {where})",
+                    key=f"{name}@{where}"))
+    return findings

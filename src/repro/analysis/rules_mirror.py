@@ -1,0 +1,103 @@
+"""Mirror-coverage rules: the fast twin and the kernel oracles must
+keep pace with the surfaces they mirror.
+
+``FastEngine`` is a struct-of-arrays re-implementation of
+``ServingEngine``; a public method added to one but not the other means
+twin tests quietly stop covering that surface.  Likewise every Pallas
+kernel entry point dispatches to a pure-jnp ``ref.py`` oracle — the
+thing property tests compare against — so an op without a wired oracle
+is an op nothing can validate.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from .core import Finding, Repo, dotted_name, find_class, rule
+
+ENGINE_PATH = "src/repro/serving/engine.py"
+FAST_PATH = "src/repro/core/fast_twin.py"
+OPS_PATH = "src/repro/kernels/ops.py"
+REF_PATH = "src/repro/kernels/ref.py"
+
+
+def _public_names(cls: ast.ClassDef) -> dict:
+    out = {}
+    for node in cls.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and not node.name.startswith("_"):
+            out.setdefault(node.name, node.lineno)
+    return out
+
+
+@rule("mirror-engine-surface",
+      "every public ServingEngine method/property has a FastEngine "
+      "counterpart")
+def check_engine_surface(repo: Repo) -> List[Finding]:
+    eng = find_class(repo.tree(ENGINE_PATH), "ServingEngine")
+    fast = find_class(repo.tree(FAST_PATH), "FastEngine")
+    if eng is None or fast is None:
+        return [Finding("mirror-engine-surface", FAST_PATH, 1,
+                        "ServingEngine or FastEngine class not found",
+                        key="missing-class")]
+    eng_names = _public_names(eng)
+    fast_names = _public_names(fast)
+    findings: List[Finding] = []
+    for name, lineno in sorted(eng_names.items()):
+        if name not in fast_names:
+            findings.append(Finding(
+                "mirror-engine-surface", FAST_PATH, fast.lineno,
+                f"ServingEngine.{name} (engine.py:{lineno}) has no "
+                "FastEngine counterpart — twin tests cannot cover it",
+                key=f"missing-{name}"))
+    return findings
+
+
+@rule("mirror-kernel-oracle",
+      "every kernel entry point dispatches to an existing ref.py "
+      "oracle, and KERNEL_MODES keeps the 'ref' mode")
+def check_kernel_oracle(repo: Repo) -> List[Finding]:
+    ops = repo.tree(OPS_PATH)
+    ref = repo.tree(REF_PATH)
+    ref_defs = {n.name for n in ref.body
+                if isinstance(n, ast.FunctionDef)}
+    findings: List[Finding] = []
+
+    modes = None
+    for node in ops.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id == "KERNEL_MODES" \
+                and isinstance(node.value, (ast.Tuple, ast.List)):
+            modes = [e.value for e in node.value.elts
+                     if isinstance(e, ast.Constant)]
+    if modes is None or "ref" not in modes:
+        findings.append(Finding(
+            "mirror-kernel-oracle", OPS_PATH, 1,
+            "KERNEL_MODES must exist and keep the 'ref' oracle mode",
+            key="kernel-modes-ref"))
+
+    for node in ops.body:
+        if not isinstance(node, ast.FunctionDef) \
+                or node.name.startswith("_"):
+            continue
+        ref_calls = set()
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Attribute):
+                name = dotted_name(sub)
+                if name.startswith("ref."):
+                    ref_calls.add(name.split(".", 1)[1])
+        if not ref_calls:
+            findings.append(Finding(
+                "mirror-kernel-oracle", OPS_PATH, node.lineno,
+                f"kernel entry point {node.name}() never dispatches to "
+                "a ref.py oracle — nothing can validate it",
+                key=f"no-oracle-{node.name}"))
+        for called in sorted(ref_calls):
+            if called not in ref_defs:
+                findings.append(Finding(
+                    "mirror-kernel-oracle", OPS_PATH, node.lineno,
+                    f"{node.name}() dispatches to ref.{called} which "
+                    "does not exist in ref.py",
+                    key=f"dangling-{called}"))
+    return findings

@@ -1,0 +1,88 @@
+"""Trace round-trip rule: a ``Request`` field is either persisted by
+the trace functions or declared serving progress.
+
+PR 9 added prefix fields to ``Request`` and had to hand-thread them
+through ``save_trace``/``load_trace``/``replay_trace``; forgetting any
+one of the three silently drops the field on replay and the
+gateway-vs-closed-loop equivalence guard stops meaning anything.  A new
+field must appear in all three functions, or be listed in
+``TRACE_PROGRESS_FIELDS`` in ``workload.py`` (fields that are serving
+*outcomes*, deliberately reset on replay).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from .core import (Finding, Repo, dataclass_fields, find_class,
+                   find_def, rule, tuple_assign)
+
+REQUEST_PATH = "src/repro/serving/request.py"
+WORKLOAD_PATH = "src/repro/core/workload.py"
+
+
+def _str_constants(node: ast.AST) -> Set[str]:
+    return {n.value for n in ast.walk(node)
+            if isinstance(n, ast.Constant) and isinstance(n.value, str)}
+
+
+def _request_kwargs(node: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call) and isinstance(n.func, ast.Name) \
+                and n.func.id == "Request":
+            out |= {kw.arg for kw in n.keywords if kw.arg}
+    return out
+
+
+@rule("trace-request-fields",
+      "every Request field is persisted by save/load/replay_trace or "
+      "listed in TRACE_PROGRESS_FIELDS")
+def check_trace_fields(repo: Repo) -> List[Finding]:
+    req = find_class(repo.tree(REQUEST_PATH), "Request")
+    if req is None:
+        return [Finding("trace-request-fields", REQUEST_PATH, 1,
+                        "Request dataclass not found", key="missing-class")]
+    tree = repo.tree(WORKLOAD_PATH)
+    progress = tuple_assign(tree, "TRACE_PROGRESS_FIELDS")
+    if progress is None:
+        return [Finding("trace-request-fields", WORKLOAD_PATH, 1,
+                        "TRACE_PROGRESS_FIELDS tuple missing from "
+                        "workload.py", key="missing-progress-tuple")]
+    fns = {}
+    for name in ("save_trace", "load_trace", "replay_trace"):
+        fn = find_def(tree.body, name)
+        if fn is None:
+            return [Finding("trace-request-fields", WORKLOAD_PATH, 1,
+                            f"{name} not found in workload.py",
+                            key=f"missing-{name}")]
+        fns[name] = fn
+
+    saved = _str_constants(fns["save_trace"])
+    loaded = _str_constants(fns["load_trace"]) \
+        | _request_kwargs(fns["load_trace"])
+    replayed = _request_kwargs(fns["replay_trace"])
+    field_names = {n for n, _ in dataclass_fields(req)}
+
+    findings: List[Finding] = []
+    for fname, lineno in dataclass_fields(req):
+        if fname in progress[0]:
+            continue
+        missing = [name for name, got in
+                   (("save_trace", saved), ("load_trace", loaded),
+                    ("replay_trace", replayed)) if fname not in got]
+        if missing:
+            findings.append(Finding(
+                "trace-request-fields", REQUEST_PATH, lineno,
+                f"Request.{fname} is not handled by "
+                f"{'/'.join(missing)} — traces would silently drop it "
+                "(or list it in TRACE_PROGRESS_FIELDS)",
+                key=f"dropped-{fname}"))
+    for fname in progress[0]:
+        if fname not in field_names:
+            findings.append(Finding(
+                "trace-request-fields", WORKLOAD_PATH, progress[1],
+                f"TRACE_PROGRESS_FIELDS lists {fname!r} which is not a "
+                "Request field (stale entry)",
+                key=f"stale-{fname}"))
+    return findings

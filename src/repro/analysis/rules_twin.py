@@ -1,0 +1,147 @@
+"""Twin-contract sync rules.
+
+``repro.serving.metrics.TWIN_EXACT_FIELDS`` is the canonical statement
+of the paper's twin-fidelity contract: the fields on which the
+object-mode engine and the SoA fast twin must agree bitwise.  These
+rules keep the three places that consume the contract from drifting:
+
+* the ``ServingMetrics`` dataclass itself (every field accounted for),
+* ``ClusterMetrics.aggregate`` (every exact field summed/merged
+  across replicas),
+* the gateway ``/v1/metrics`` body (every exact field emitted to
+  operators).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from .core import (Finding, Repo, call_kwargs, dataclass_fields,
+                   find_class, find_def, rule, str_dict_keys,
+                   tuple_assign)
+
+METRICS_PATH = "src/repro/serving/metrics.py"
+CLUSTER_PATH = "src/repro/serving/cluster.py"
+GATEWAY_PATH = "src/repro/serving/gateway.py"
+
+CONTRACT_TUPLES = ("TWIN_EXACT_FIELDS", "TWIN_TOLERANT_FIELDS",
+                   "TWIN_SAMPLE_FIELDS")
+
+
+def _exact_fields(repo: Repo) -> Optional[Tuple[List[str], int]]:
+    return tuple_assign(repo.tree(METRICS_PATH), "TWIN_EXACT_FIELDS")
+
+
+@rule("twin-metrics-fields",
+      "every ServingMetrics field is classified in TWIN_EXACT_FIELDS / "
+      "TWIN_TOLERANT_FIELDS / TWIN_SAMPLE_FIELDS")
+def check_metrics_fields(repo: Repo) -> List[Finding]:
+    findings: List[Finding] = []
+    tree = repo.tree(METRICS_PATH)
+    cls = find_class(tree, "ServingMetrics")
+    if cls is None:
+        return [Finding("twin-metrics-fields", METRICS_PATH, 1,
+                        "ServingMetrics dataclass not found",
+                        key="missing-class")]
+    tuples = {}
+    for name in CONTRACT_TUPLES:
+        got = tuple_assign(tree, name)
+        if got is None:
+            findings.append(Finding(
+                "twin-metrics-fields", METRICS_PATH, 1,
+                f"contract tuple {name} missing from metrics.py",
+                key=f"missing-{name}"))
+        else:
+            tuples[name] = got
+    classified = {f for elems, _ in tuples.values() for f in elems}
+    fields = dataclass_fields(cls)
+    field_names = {n for n, _ in fields}
+    for fname, lineno in fields:
+        if fname not in classified:
+            findings.append(Finding(
+                "twin-metrics-fields", METRICS_PATH, lineno,
+                f"ServingMetrics.{fname} is not classified in any twin "
+                "contract tuple — add it to TWIN_EXACT_FIELDS (or the "
+                "tolerant/sample exclusions) so twin tests compare it",
+                key=f"unclassified-{fname}"))
+    seen = set()
+    for tname, (elems, lineno) in tuples.items():
+        for fname in elems:
+            if fname not in field_names:
+                findings.append(Finding(
+                    "twin-metrics-fields", METRICS_PATH, lineno,
+                    f"{tname} lists {fname!r} which is not a "
+                    "ServingMetrics field (stale contract entry)",
+                    key=f"stale-{fname}"))
+            if fname in seen:
+                findings.append(Finding(
+                    "twin-metrics-fields", METRICS_PATH, lineno,
+                    f"{fname!r} appears in more than one contract tuple",
+                    key=f"dup-{fname}"))
+            seen.add(fname)
+    return findings
+
+
+@rule("twin-cluster-aggregate",
+      "every TWIN_EXACT_FIELDS entry is a ClusterMetrics field and is "
+      "merged in ClusterMetrics.aggregate")
+def check_cluster_aggregate(repo: Repo) -> List[Finding]:
+    exact = _exact_fields(repo)
+    if exact is None:       # twin-metrics-fields reports the root cause
+        return []
+    findings: List[Finding] = []
+    tree = repo.tree(CLUSTER_PATH)
+    cls = find_class(tree, "ClusterMetrics")
+    if cls is None:
+        return [Finding("twin-cluster-aggregate", CLUSTER_PATH, 1,
+                        "ClusterMetrics dataclass not found",
+                        key="missing-class")]
+    cluster_fields = {n for n, _ in dataclass_fields(cls)}
+    agg = find_def(cls.body, "aggregate")
+    if agg is None:
+        return [Finding("twin-cluster-aggregate", CLUSTER_PATH,
+                        cls.lineno, "ClusterMetrics.aggregate not found",
+                        key="missing-aggregate")]
+    kwargs = call_kwargs(agg, ("cls", "ClusterMetrics"))
+    for fname in exact[0]:
+        if fname not in cluster_fields:
+            findings.append(Finding(
+                "twin-cluster-aggregate", CLUSTER_PATH, cls.lineno,
+                f"TWIN_EXACT_FIELDS entry {fname!r} has no "
+                "ClusterMetrics field — cluster runs would drop it",
+                key=f"no-field-{fname}"))
+        elif fname not in kwargs:
+            findings.append(Finding(
+                "twin-cluster-aggregate", CLUSTER_PATH, agg.lineno,
+                f"ClusterMetrics.aggregate never passes {fname!r} — the "
+                "cluster aggregate would silently use the default",
+                key=f"not-aggregated-{fname}"))
+    return findings
+
+
+@rule("twin-gateway-metrics",
+      "every TWIN_EXACT_FIELDS entry is a literal key in the gateway "
+      "/v1/metrics body (AsyncGateway.snapshot)")
+def check_gateway_metrics(repo: Repo) -> List[Finding]:
+    exact = _exact_fields(repo)
+    if exact is None:
+        return []
+    tree = repo.tree(GATEWAY_PATH)
+    cls = find_class(tree, "AsyncGateway")
+    if cls is None:
+        return [Finding("twin-gateway-metrics", GATEWAY_PATH, 1,
+                        "AsyncGateway not found", key="missing-class")]
+    snap = find_def(cls.body, "snapshot")
+    if snap is None:
+        return [Finding("twin-gateway-metrics", GATEWAY_PATH, cls.lineno,
+                        "AsyncGateway.snapshot not found",
+                        key="missing-snapshot")]
+    keys = str_dict_keys(snap)
+    findings: List[Finding] = []
+    for fname in exact[0]:
+        if fname not in keys:
+            findings.append(Finding(
+                "twin-gateway-metrics", GATEWAY_PATH, snap.lineno,
+                f"/v1/metrics body never emits {fname!r} — operators "
+                "cannot see a field the twin contract validates",
+                key=f"not-emitted-{fname}"))
+    return findings

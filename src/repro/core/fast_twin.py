@@ -376,6 +376,14 @@ class FastEngine:
     def adapters(self) -> _FastAdapterCache:
         return self._adapters
 
+    @property
+    def queue_depth(self) -> int:
+        """Admitted-but-unfinished requests, mirroring
+        ``ServingEngine.queue_depth``: waiting + running rows plus
+        submitted arrivals the clock has not reached yet."""
+        return (len(self.waiting) + self._n_run
+                + len(self._pend) - self._next)
+
     # ------------------------------------------------------------------ #
     def _grow(self, need: int) -> None:
         cap = len(self._arrival)

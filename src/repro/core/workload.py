@@ -236,6 +236,19 @@ def open_loop_arrivals(pool: Sequence[Adapter], dataset: str = "medium",
             heap, (t + rng.exponential(1.0 / rate), adapter_uid, rate))
 
 
+# ``Request`` fields that are serving *progress*, not arrival identity:
+# traces persist only identity, so these are deliberately absent from
+# ``save_trace``/``load_trace``/``replay_trace``.  The trace-request-
+# fields lint rule in ``repro.analysis`` reads this tuple — a new
+# ``Request`` field must either be threaded through all three trace
+# functions or added here, so it can never be silently dropped.
+TRACE_PROGRESS_FIELDS = (
+    "generated", "admitted_at", "first_token_at", "finished_at",
+    "token_times", "n_preemptions",
+    "n_retries", "n_timeouts", "failed_at", "retry_at", "disconnected_at",
+)
+
+
 def replay_trace(requests: Iterable[Request]) -> Iterator[Request]:
     """Trace-replay driver: yield *fresh* copies (generation progress
     reset) of a recorded request stream, in arrival order.  Feeding the

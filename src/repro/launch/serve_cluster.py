@@ -126,6 +126,7 @@ def run_once(args, policy: str, verbose: bool = True) -> ClusterMetrics:
     use_prefix = args.prefix_cache or (
         args.prefix_share > 0 and args.prefix_len > 0)
     specs = make_replica_specs(args.replicas, slots, kvs,
+                               block_size=args.block_size,
                                sched_policy=args.sched_policy,
                                prefix_cache=use_prefix)
 
@@ -258,6 +259,8 @@ def build_parser() -> argparse.ArgumentParser:
                     help="per-replica adapter slots (scalar or comma list)")
     ap.add_argument("--kv-tokens", default="",
                     help="per-replica KV capacity override (comma list)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV paging block size (tokens per block)")
     ap.add_argument("--policy", default="affinity",
                     choices=sorted(POLICIES))
     ap.add_argument("--sched-policy", default="fcfs",

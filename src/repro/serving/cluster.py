@@ -78,10 +78,19 @@ class ReplicaSpec:
             prefix_cache=self.prefix_cache)
 
 
+# ``EngineConfig`` knobs with deliberately no ``ReplicaSpec`` mirror
+# (the config-threading lint rules in ``repro.analysis`` read this
+# tuple): ``max_steps`` is an internal runaway-loop bound, and
+# ``dynamic_slots``/``adapter_kv_tokens`` are the single-engine S-LoRA
+# memory-pool mode that cluster replicas do not expose.
+NON_REPLICA_FIELDS = ("max_steps", "dynamic_slots", "adapter_kv_tokens")
+
+
 def make_replica_specs(
         n: int, adapter_slots: Union[int, Sequence[int]],
         kv_capacity_tokens: Union[int, Sequence[int]],
         max_running: int = 256,
+        block_size: int = 16,
         sched_policy: str = "fcfs",
         prefix_cache: bool = False) -> List[ReplicaSpec]:
     """Uniform or heterogeneous specs from scalars / per-replica lists."""
@@ -93,7 +102,8 @@ def make_replica_specs(
     slots = expand(adapter_slots, "adapter_slots")
     kvs = expand(kv_capacity_tokens, "kv_capacity_tokens")
     return [ReplicaSpec(adapter_slots=s, kv_capacity_tokens=k,
-                        max_running=max_running, sched_policy=sched_policy,
+                        max_running=max_running, block_size=block_size,
+                        sched_policy=sched_policy,
                         prefix_cache=prefix_cache)
             for s, k in zip(slots, kvs)]
 

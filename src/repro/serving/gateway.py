@@ -719,8 +719,16 @@ class AsyncGateway:
 
     # ------------------------------------------------------------------ #
     def snapshot(self) -> dict:
-        """Live counters (the ``/v1/metrics`` endpoint)."""
+        """Live counters (the ``/v1/metrics`` endpoint).
+
+        The ``serving`` section mirrors the twin-equivalence contract:
+        the twin-gateway-metrics lint rule requires every
+        ``TWIN_EXACT_FIELDS`` name to appear as a literal key here, so
+        an operator polling ``/v1/metrics`` sees exactly the fields the
+        twins are validated on.
+        """
         pc = getattr(self.engine, "prefix", None)
+        s = self.engine.finalize()
         return {
             "state": self.state,
             "clock_s": round(self.engine.clock, 3),
@@ -742,6 +750,30 @@ class AsyncGateway:
             "n_prefix_misses": pc.n_misses if pc else 0,
             "n_prefix_evictions": pc.n_evictions if pc else 0,
             "prefix_tokens_saved": pc.tokens_saved if pc else 0,
+            # engine-side metrics over the elapsed virtual clock — one
+            # literal key per TWIN_EXACT_FIELDS entry (lint-enforced)
+            "serving": {
+                "throughput": s.throughput,
+                "ideal_throughput": s.ideal_throughput,
+                "duration": s.duration,
+                "n_finished": s.n_finished,
+                "n_preemptions": s.n_preemptions,
+                "n_loads": s.n_loads,
+                "max_kv_used": s.max_kv_used,
+                "ttft": s.ttft,
+                "ttft_p50": s.ttft_p50,
+                "ttft_p99": s.ttft_p99,
+                "n_starved_requests": s.n_starved_requests,
+                "starved_per_adapter": dict(s.starved_per_adapter),
+                "n_timeouts": s.n_timeouts,
+                "n_retries": s.n_retries,
+                "n_failed_requests": s.n_failed_requests,
+                "n_load_faults": s.n_load_faults,
+                "n_prefix_hits": s.n_prefix_hits,
+                "n_prefix_misses": s.n_prefix_misses,
+                "n_prefix_evictions": s.n_prefix_evictions,
+                "prefix_tokens_saved": s.prefix_tokens_saved,
+            },
         }
 
 

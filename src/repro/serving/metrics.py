@@ -59,6 +59,32 @@ class ServingMetrics:
         return self.throughput < 0.9 * self.ideal_throughput
 
 
+# --- canonical twin-equivalence contract ------------------------------
+# Every ``ServingMetrics`` field must appear in exactly one of the three
+# tuples below; ``repro.analysis`` (rule twin-metrics-fields) fails the
+# build otherwise.  Tests compare object-mode engines/twins against the
+# SoA fast twins field-by-field over TWIN_EXACT_FIELDS and require
+# bitwise equality — this tuple IS the paper's twin-fidelity contract.
+TWIN_EXACT_FIELDS = (
+    "throughput", "ideal_throughput", "duration", "n_finished",
+    "n_preemptions", "n_loads", "max_kv_used", "ttft",
+    "ttft_p50", "ttft_p99", "n_starved_requests", "starved_per_adapter",
+    "n_timeouts", "n_retries", "n_failed_requests", "n_load_faults",
+    "n_prefix_hits", "n_prefix_misses", "n_prefix_evictions",
+    "prefix_tokens_saved",
+)
+
+# Compared with a float tolerance only: the object path averages ITL
+# per request then over requests, the SoA path telescopes token gaps —
+# algebraically equal, but the summation orders differ in the last ulp.
+TWIN_TOLERANT_FIELDS = ("itl",)
+
+# Raw per-request sample pools (order-sensitive lists, not aggregates):
+# consumed by ``ClusterMetrics.aggregate`` for exact cluster
+# percentiles, compared as multisets where tests need them.
+TWIN_SAMPLE_FIELDS = ("ttft_samples",)
+
+
 def ttft_percentiles(ttfts) -> Dict[str, float]:
     """p50/p99 of a TTFT sample (0.0 when empty) — shared by the
     object-mode ``summarize`` and the fast twin's vectorized finalize so

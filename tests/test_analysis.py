@@ -1,0 +1,336 @@
+"""repro-lint self-tests: every rule gets a failing + passing fixture,
+suppression and baseline round-trips, and the acceptance-criteria
+mutations (drop a field from TWIN_EXACT_FIELDS / ClusterMetrics.aggregate
+/ the gateway /v1/metrics body -> the gate fails)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis import core
+from repro.analysis.__main__ import main as lint_main
+
+ROOT = core.REPO_ROOT
+
+FIXTURE = "src/repro/serving/zz_lint_fixture.py"
+
+
+def lint(rules, overrides=None):
+    return core.run_rules(core.Repo(overrides=overrides), rules=rules)
+
+
+def fixture_findings(rule, text, path=FIXTURE):
+    report = lint([rule], overrides={path: text})
+    return [f for f in report.new if f.path == path]
+
+
+def read(rel: str) -> str:
+    return (ROOT / rel).read_text()
+
+
+def mutate(rel: str, old: str, new: str) -> dict:
+    text = read(rel)
+    assert old in text, f"mutation anchor missing from {rel}: {old!r}"
+    return {rel: text.replace(old, new)}
+
+
+# --------------------------------------------------------------------- #
+# determinism rules
+# --------------------------------------------------------------------- #
+
+def test_wallclock_negative():
+    bad = "import time\n\n\ndef step():\n    return time.time()\n"
+    found = fixture_findings("determinism-wallclock", bad)
+    assert len(found) == 1 and "time.time" in found[0].message
+
+
+def test_wallclock_positive():
+    ok = "def step(clock):\n    return clock + 0.5\n"
+    assert fixture_findings("determinism-wallclock", ok) == []
+
+
+def test_perf_counter_forbidden_in_serving_allowed_in_core():
+    text = "import time\n\n\ndef f():\n    return time.perf_counter()\n"
+    assert fixture_findings("determinism-wallclock", text)  # serving/
+    core_path = "src/repro/core/zz_lint_fixture.py"
+    assert fixture_findings("determinism-wallclock", text,
+                            path=core_path) == []
+
+
+def test_rng_negative_unseeded_default_rng():
+    bad = ("import numpy as np\n\n\ndef f():\n"
+           "    return np.random.default_rng()\n")
+    found = fixture_findings("determinism-rng", bad)
+    assert len(found) == 1 and "unseeded" in found[0].message
+
+
+def test_rng_negative_stdlib_and_global_numpy():
+    bad = ("import random\nimport numpy as np\n\n\ndef f():\n"
+           "    np.random.seed(0)\n    return random.random()\n")
+    found = fixture_findings("determinism-rng", bad)
+    assert {f.key for f in found} == {"np.random.seed@f",
+                                      "random.random@f"}
+
+
+def test_rng_positive_seeded():
+    ok = ("import numpy as np\n\n\ndef f(seed):\n"
+          "    return np.random.default_rng(seed)\n")
+    assert fixture_findings("determinism-rng", ok) == []
+
+
+# --------------------------------------------------------------------- #
+# twin-contract rules (the acceptance-criteria mutations)
+# --------------------------------------------------------------------- #
+
+def test_twin_metrics_fields_clean():
+    assert lint(["twin-metrics-fields"]).new == []
+
+
+def test_twin_metrics_fields_drop_from_exact_fails():
+    ov = mutate("src/repro/serving/metrics.py",
+                '"n_preemptions", "n_loads", "max_kv_used", "ttft",',
+                '"n_preemptions", "max_kv_used", "ttft",')
+    report = lint(["twin-metrics-fields"], overrides=ov)
+    assert any(f.key == "unclassified-n_loads" for f in report.new)
+
+
+def test_twin_metrics_fields_stale_entry_fails():
+    ov = mutate("src/repro/serving/metrics.py",
+                'TWIN_TOLERANT_FIELDS = ("itl",)',
+                'TWIN_TOLERANT_FIELDS = ("itl", "ghost")')
+    report = lint(["twin-metrics-fields"], overrides=ov)
+    assert any(f.key == "stale-ghost" for f in report.new)
+
+
+def test_twin_cluster_aggregate_clean():
+    assert lint(["twin-cluster-aggregate"]).new == []
+
+
+def test_twin_cluster_aggregate_drop_kwarg_fails():
+    ov = mutate("src/repro/serving/cluster.py",
+                "            n_loads=sum(m.n_loads for m in per),\n", "")
+    report = lint(["twin-cluster-aggregate"], overrides=ov)
+    assert any(f.key == "not-aggregated-n_loads" for f in report.new)
+
+
+def test_twin_cluster_aggregate_drop_field_fails():
+    ov = mutate("src/repro/serving/cluster.py",
+                "    n_loads: int\n", "")
+    report = lint(["twin-cluster-aggregate"], overrides=ov)
+    assert any(f.key == "no-field-n_loads" for f in report.new)
+
+
+def test_twin_gateway_metrics_clean():
+    assert lint(["twin-gateway-metrics"]).new == []
+
+
+def test_twin_gateway_metrics_drop_key_fails():
+    ov = mutate("src/repro/serving/gateway.py",
+                '                "n_loads": s.n_loads,\n', "")
+    report = lint(["twin-gateway-metrics"], overrides=ov)
+    assert any(f.key == "not-emitted-n_loads" for f in report.new)
+
+
+# --------------------------------------------------------------------- #
+# config-threading rules
+# --------------------------------------------------------------------- #
+
+def test_config_threading_clean():
+    assert lint(["config-replica-threading",
+                 "config-cli-threading"]).new == []
+
+
+def test_config_replica_threading_drop_param_fails():
+    ov = mutate("src/repro/serving/cluster.py",
+                "        block_size: int = 16,\n", "")
+    report = lint(["config-replica-threading"], overrides=ov)
+    assert any(f.key == "maker-block_size" for f in report.new)
+
+
+def test_config_cli_threading_drop_flag_fails():
+    ov = mutate(
+        "src/repro/launch/serve_cluster.py",
+        'ap.add_argument("--block-size", type=int, default=16,',
+        'ap.add_argument("--zz-renamed", type=int, default=16,')
+    report = lint(["config-cli-threading"], overrides=ov)
+    assert any(f.key == "flag-block_size" for f in report.new)
+
+
+# --------------------------------------------------------------------- #
+# mirror-coverage rules
+# --------------------------------------------------------------------- #
+
+def test_mirror_engine_surface_clean():
+    assert lint(["mirror-engine-surface"]).new == []
+
+
+def test_mirror_engine_surface_hidden_method_fails():
+    ov = mutate("src/repro/core/fast_twin.py",
+                "    def cancel(", "    def _cancel(")
+    report = lint(["mirror-engine-surface"], overrides=ov)
+    assert any(f.key == "missing-cancel" for f in report.new)
+
+
+def test_mirror_kernel_oracle_clean():
+    assert lint(["mirror-kernel-oracle"]).new == []
+
+
+def test_mirror_kernel_oracle_negative():
+    rel = "src/repro/kernels/ops.py"
+    text = read(rel).replace(
+        'KERNEL_MODES = ("pallas", "ref", "interpret")',
+        'KERNEL_MODES = ("pallas", "interpret")')
+    text += "\n\ndef rogue_op(x):\n    return x\n"
+    report = lint(["mirror-kernel-oracle"], overrides={rel: text})
+    keys = {f.key for f in report.new}
+    assert {"kernel-modes-ref", "no-oracle-rogue_op"} <= keys
+
+
+# --------------------------------------------------------------------- #
+# async-safety rule
+# --------------------------------------------------------------------- #
+
+def test_async_blocking_negative():
+    bad = ("import time\n\n\nasync def pump():\n"
+           "    time.sleep(0.1)\n    open('x').read()\n")
+    found = fixture_findings("async-blocking-call", bad)
+    assert {f.key for f in found} == {"time.sleep@pump", "open@pump"}
+
+
+def test_async_blocking_positive():
+    ok = ("import asyncio\n\n\nasync def pump():\n"
+          "    await asyncio.sleep(0.1)\n")
+    assert fixture_findings("async-blocking-call", ok) == []
+
+
+# --------------------------------------------------------------------- #
+# trace round-trip rule
+# --------------------------------------------------------------------- #
+
+def test_trace_fields_clean():
+    assert lint(["trace-request-fields"]).new == []
+
+
+def test_trace_fields_new_request_field_fails():
+    ov = mutate("src/repro/serving/request.py",
+                "    prefix_len: int = 0\n",
+                "    prefix_len: int = 0\n    priority: int = 0\n")
+    report = lint(["trace-request-fields"], overrides=ov)
+    found = [f for f in report.new if f.key == "dropped-priority"]
+    assert found and "save_trace" in found[0].message
+
+
+def test_trace_fields_stale_progress_entry_fails():
+    ov = mutate("src/repro/core/workload.py",
+                '    "token_times", "n_preemptions",',
+                '    "token_times", "n_preemptions", "ghost_field",')
+    report = lint(["trace-request-fields"], overrides=ov)
+    assert any(f.key == "stale-ghost_field" for f in report.new)
+
+
+# --------------------------------------------------------------------- #
+# suppressions, baseline, CLI
+# --------------------------------------------------------------------- #
+
+def test_inline_suppression_same_line_and_line_above():
+    bad = ("import time\n\n\ndef f():\n"
+           "    a = time.time()  # repro-lint: ignore[determinism-wallclock]\n"
+           "    # repro-lint: ignore[determinism-wallclock]\n"
+           "    b = time.time()\n"
+           "    return a + b\n")
+    report = lint(["determinism-wallclock"], overrides={FIXTURE: bad})
+    mine = [f for f in report.suppressed if f.path == FIXTURE]
+    assert len(mine) == 2
+    assert not [f for f in report.new if f.path == FIXTURE]
+
+
+def test_inline_suppression_wrong_rule_does_not_apply():
+    bad = ("import time\n\n\ndef f():\n"
+           "    return time.time()  # repro-lint: ignore[determinism-rng]\n")
+    assert len(fixture_findings("determinism-wallclock", bad)) == 1
+
+
+def test_baseline_round_trip(tmp_path):
+    bad = "import time\n\n\ndef f():\n    return time.time()\n"
+    repo = core.Repo(overrides={FIXTURE: bad})
+    report = core.run_rules(repo, rules=["determinism-wallclock"])
+    mine = [f for f in report.new if f.path == FIXTURE]
+    assert len(mine) == 1
+    bl = tmp_path / "baseline.json"
+    core.save_baseline(bl, mine)
+    entries = core.load_baseline(bl)
+    assert len(entries) == 1 and entries[0]["rule"] == \
+        "determinism-wallclock"
+    again = core.run_rules(repo, rules=["determinism-wallclock"],
+                           baseline=entries)
+    assert not [f for f in again.new if f.path == FIXTURE]
+    assert [f for f in again.baselined if f.path == FIXTURE]
+
+
+def test_stale_baseline_entries_reported():
+    entries = [{"rule": "determinism-wallclock", "path": "nope.py",
+                "key": "gone@nowhere"}]
+    report = core.run_rules(core.Repo(), rules=["determinism-wallclock"],
+                            baseline=entries)
+    assert report.stale_baseline == \
+        ["determinism-wallclock::nope.py::gone@nowhere"]
+
+
+def test_committed_baseline_is_small_and_justified():
+    data = json.loads(read("tools/repro_lint_baseline.json"))
+    entries = data["suppressions"]
+    assert len(entries) <= 5
+    assert all(e.get("reason", "").strip() and
+               "TODO" not in e["reason"] for e in entries)
+
+
+def test_cli_clean_repo_exits_zero_in_process():
+    assert lint_main(["-q"]) == 0
+
+
+def test_cli_negative_fixture_exits_nonzero():
+    ov = mutate("src/repro/serving/metrics.py",
+                '"n_preemptions", "n_loads", "max_kv_used", "ttft",',
+                '"n_preemptions", "max_kv_used", "ttft",')
+    assert lint_main(["-q", "--rules", "twin-metrics-fields"],
+                     overrides=ov) == 1
+
+
+def test_cli_unknown_rule_errors():
+    try:
+        lint_main(["--rules", "no-such-rule"])
+    except KeyError as e:
+        assert "no-such-rule" in str(e)
+    else:
+        raise AssertionError("unknown rule id should raise")
+
+
+def test_cli_clean_repo_exits_zero_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis"], cwd=ROOT, env=env,
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        timeout=120)
+    assert proc.returncode == 0, proc.stdout
+    assert "0 new" in proc.stdout
+
+
+def test_write_baseline_round_trip(tmp_path):
+    bl = tmp_path / "bl.json"
+    ov = mutate("src/repro/serving/metrics.py",
+                '"n_preemptions", "n_loads", "max_kv_used", "ttft",',
+                '"n_preemptions", "max_kv_used", "ttft",')
+    assert lint_main(["-q", "--rules", "twin-metrics-fields",
+                      "--baseline", str(bl), "--write-baseline"],
+                     overrides=ov) == 0
+    assert lint_main(["-q", "--rules", "twin-metrics-fields",
+                      "--baseline", str(bl)], overrides=ov) == 0
+    assert Path(bl).is_file() and json.loads(bl.read_text())["suppressions"]
+
+
+def test_every_rule_has_registry_metadata():
+    assert len(core.RULES) >= 11
+    for rid, info in core.RULES.items():
+        assert rid == info.rule_id and info.synopsis

@@ -21,12 +21,7 @@ from repro.core import (ClusterDigitalTwin, DigitalTwin, FastTwin, Scenario,
 from repro.core.estimators import FittedEstimators
 from repro.core.sweep import run_task
 from repro.serving import SCHED_POLICIES, ClusterRouter, FailureEvent
-
-EXACT_FIELDS = ("throughput", "ideal_throughput", "duration", "n_finished",
-                "n_preemptions", "n_loads", "max_kv_used", "ttft",
-                "ttft_p50", "ttft_p99", "n_starved_requests",
-                "starved_per_adapter", "n_prefix_hits", "n_prefix_misses",
-                "n_prefix_evictions", "prefix_tokens_saved")
+from repro.serving.metrics import TWIN_EXACT_FIELDS as EXACT_FIELDS
 
 
 def mk_est(kv_base: float = 120000.0, kv_slope: float = -60.0

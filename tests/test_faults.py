@@ -29,12 +29,7 @@ from repro.serving import (AdapterLoadFault, AsyncGateway, CircuitBreaker,
                            ReplicaCrash, Request, ServingEngine,
                            StragglerWindow, SyntheticExecutor,
                            generate_fault_plan, parse_chaos_spec)
-
-EXACT_FIELDS = ("throughput", "ideal_throughput", "duration", "n_finished",
-                "n_preemptions", "n_loads", "max_kv_used", "ttft",
-                "ttft_p50", "ttft_p99", "n_starved_requests",
-                "starved_per_adapter", "n_timeouts", "n_retries",
-                "n_failed_requests", "n_load_faults")
+from repro.serving.metrics import TWIN_EXACT_FIELDS as EXACT_FIELDS
 
 
 def mk_est() -> FittedEstimators:

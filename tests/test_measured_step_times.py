@@ -21,11 +21,7 @@ from repro.core import (DigitalTwin, FastTwin, MeasuredStepTimes,
                         WorkloadSpec, find_optimal_placement,
                         fit_measured_step_times, make_adapter_pool)
 from repro.core.estimators import FittedEstimators
-
-EXACT_FIELDS = ("throughput", "ideal_throughput", "duration", "n_finished",
-                "n_preemptions", "n_loads", "max_kv_used", "ttft",
-                "ttft_p50", "ttft_p99", "n_starved_requests",
-                "starved_per_adapter")
+from repro.serving.metrics import TWIN_EXACT_FIELDS as EXACT_FIELDS
 
 
 def mk_est() -> FittedEstimators:

@@ -28,13 +28,8 @@ from repro.core.placement import train_cluster_placement_model
 from repro.core.workload import load_trace, replay_trace, save_trace
 from repro.serving import (ClusterRouter, PagedKVCache, SharedPrefixCache,
                            make_replica_specs)
+from repro.serving.metrics import TWIN_EXACT_FIELDS as EXACT_FIELDS
 from repro.serving.request import Adapter, Request
-
-EXACT_FIELDS = ("throughput", "ideal_throughput", "duration", "n_finished",
-                "n_preemptions", "n_loads", "max_kv_used", "ttft",
-                "ttft_p50", "ttft_p99", "n_starved_requests",
-                "starved_per_adapter", "n_prefix_hits", "n_prefix_misses",
-                "n_prefix_evictions", "prefix_tokens_saved")
 
 
 def mk_est(kv_base: float = 120000.0, kv_slope: float = -60.0
@@ -360,7 +355,8 @@ def test_twin_replay_resets_reliability_fields():
     m_scar = DigitalTwin(est, mode="full").simulate(
         spec, slots=3, requests=scarred).metrics
     # the replay starts every lifecycle clean: bitwise-identical metrics
-    for f in EXACT_FIELDS + ("n_retries", "n_timeouts"):
+    # (n_retries/n_timeouts are already in the canonical exact set)
+    for f in EXACT_FIELDS:
         assert getattr(m_clean, f) == getattr(m_scar, f), f
     assert m_scar.n_retries == 0 and m_scar.n_timeouts == 0
     # and the caller's scarred stream is untouched (deep copies)
